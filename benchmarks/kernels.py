@@ -1,0 +1,56 @@
+"""Kernel micro-benchmarks.
+
+On CPU the Pallas kernels run under interpret=True (a Python interpreter —
+its wall time is meaningless), so we time the jnp reference path (what the
+kernel computes) and report the kernel/oracle agreement + the analytic
+VMEM/MXU utilization of the kernel's tiling for the TPU target."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import qo
+from repro.kernels import ops
+from repro.kernels.qo_update import TABLE_ROWS
+
+
+def _time(f, *args, iters=20):
+    r = f(*args)
+    jax.block_until_ready(r)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        r = f(*args)
+    jax.block_until_ready(r)
+    return (time.perf_counter() - t0) / iters
+
+
+def run(out=None):
+    rng = np.random.default_rng(0)
+    report = {}
+    for cap, n in ((128, 100_000), (256, 1_000_000)):
+        x = jnp.array(rng.normal(0, 1, n).astype(np.float32))
+        y = jnp.array(rng.normal(0, 1, n).astype(np.float32))
+        t0 = qo.init(cap, radius=0.05)
+        upd = jax.jit(qo.update)
+        dt = _time(upd, t0, x, y)
+        q = jax.jit(qo.best_split)
+        table = upd(t0, x, y)
+        qt = _time(q, table)
+        # kernel agreement (interpret mode, correctness only)
+        tk = ops.qo_update(t0, x[:4096], y[:4096], interpret=True)
+        tr = qo.update(t0, x[:4096], y[:4096])
+        agree = float(jnp.max(jnp.abs(tk["y"]["n"] - tr["y"]["n"])))
+        # analytic kernel occupancy for TPU target (tile=1024, f32)
+        tile = 1024
+        vmem_bytes = (3 * tile + tile * cap + TABLE_ROWS * cap * 2) * 4
+        report[f"qo_update_cap{cap}_n{n}"] = {
+            "observe_ns_per_elem": dt / n * 1e9,
+            "query_us": qt * 1e6,
+            "kernel_vs_ref_max_abs_n_diff": agree,
+            "kernel_tile_vmem_bytes": vmem_bytes,
+            "kernel_vmem_fits_16MB": vmem_bytes < 16 * 2 ** 20,
+        }
+    return report

@@ -1,0 +1,81 @@
+"""Roofline report generator: reads dryrun_results.json into the
+EXPERIMENTS.md tables (one row per (arch x shape x mesh))."""
+from __future__ import annotations
+
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "dryrun_results.json")
+
+
+def load(path=RESULTS):
+    with open(path) as f:
+        return json.load(f)
+
+
+def table(rows=None, mesh="16x16"):
+    rows = rows or load()
+    out = []
+    for r in rows:
+        if r.get("mesh") != mesh:
+            continue
+        if r["status"] == "skipped":
+            out.append({"arch": r["arch"], "shape": r["shape"],
+                        "status": "skipped", "reason": r["reason"]})
+            continue
+        if r["status"] != "ok":
+            out.append({"arch": r["arch"], "shape": r["shape"],
+                        "status": "FAILED"})
+            continue
+        out.append({
+            "arch": r["arch"], "shape": r["shape"], "status": "ok",
+            "t_compute_s": r["t_compute_s"],
+            "t_memory_s": r["t_memory_s"],
+            "t_collective_s": r["t_collective_s"],
+            "bottleneck": r["bottleneck"],
+            "useful_flops_ratio": r["useful_flops_ratio"],
+            "roofline_fraction": r["roofline_fraction"],
+        })
+    return out
+
+
+def markdown(rows=None, mesh="16x16"):
+    t = table(rows, mesh)
+    lines = [
+        f"| arch | shape | compute s | memory s | collective s | bottleneck "
+        f"| useful-flops | roofline frac |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in t:
+        if r["status"] != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                         f"{r['status']} | — | — |")
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute_s']:.3g} | "
+            f"{r['t_memory_s']:.3g} | {r['t_collective_s']:.3g} | "
+            f"{r['bottleneck']} | {r['useful_flops_ratio']:.2f} | "
+            f"{r['roofline_fraction']:.4f} |")
+    return "\n".join(lines)
+
+
+def summary(rows=None):
+    rows = rows or load()
+    ok = [r for r in rows if r["status"] == "ok"]
+    by_bneck = {}
+    for r in ok:
+        by_bneck.setdefault(r["bottleneck"], []).append(
+            (r["arch"], r["shape"], r["mesh"]))
+    worst = sorted(ok, key=lambda r: r["roofline_fraction"])[:5]
+    most_coll = sorted(ok, key=lambda r: -r["t_collective_s"])[:5]
+    return {
+        "cells_ok": len(ok),
+        "cells_skipped": sum(1 for r in rows if r["status"] == "skipped"),
+        "cells_failed": sum(1 for r in rows if r["status"] == "FAILED"),
+        "bottleneck_counts": {k: len(v) for k, v in by_bneck.items()},
+        "worst_roofline": [(r["arch"], r["shape"], r["mesh"],
+                            round(r["roofline_fraction"], 5)) for r in worst],
+        "most_collective_bound": [(r["arch"], r["shape"], r["mesh"],
+                                   round(r["t_collective_s"], 2))
+                                  for r in most_coll],
+    }

@@ -1,0 +1,85 @@
+"""Benchmark entry point: ``PYTHONPATH=src python -m benchmarks.run``.
+
+One section per paper table/figure + the system-level benches.
+Prints ``name,us_per_call,derived`` CSV rows (harness contract) and dumps
+the full JSON report to benchmarks/report.json.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+L.set_compute_dtype(jnp.float32)  # CPU container cannot execute bf16 dots
+
+from benchmarks import aos, kernels, roofline, tree  # noqa: E402
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="full paper grid (sizes to 50k, 10 seeds)")
+    ap.add_argument("--skip-aos", action="store_true")
+    args = ap.parse_args()
+
+    report = {}
+    csv = []
+
+    # --- paper Figs. 1-6: AO comparison grid -----------------------------
+    if not args.skip_aos:
+        rep = aos.run(full=args.full)
+        report["aos"] = {k: v for k, v in rep.items() if k != "rows"}
+        report["aos_rows"] = rep["rows"]
+        # emit averaged CSV per AO
+        by_ao = {}
+        for r in rep["rows"]:
+            by_ao.setdefault(r["ao"], []).append(r)
+        for ao_name, rows in sorted(by_ao.items()):
+            obs = sum(r["observe_s"] for r in rows) / len(rows)
+            qry = sum(r["query_s"] for r in rows) / len(rows)
+            merit = sum(r["merit"] for r in rows) / len(rows)
+            elems = sum(r["elements"] for r in rows) / len(rows)
+            csv.append((f"ao_observe_{ao_name}", obs * 1e6,
+                        f"elements={elems:.0f}"))
+            csv.append((f"ao_query_{ao_name}", qry * 1e6,
+                        f"merit={merit:.4f}"))
+
+    # --- tree-level e2e (paper §7 future work, implemented) --------------
+    trep = tree.run()
+    report["tree"] = trep
+    csv.append(("hoeffding_tree_update", 1e6 / trep["instances_per_s"],
+                f"mse_ratio={trep['mse_ratio']:.4f}"))
+
+    # --- kernel micro-benches ---------------------------------------------
+    krep = kernels.run()
+    report["kernels"] = krep
+    for name, k in krep.items():
+        csv.append((f"kernel_{name}", k["observe_ns_per_elem"] / 1e3,
+                    f"query_us={k['query_us']:.1f}"))
+
+    # --- roofline summary from the dry-run ---------------------------------
+    try:
+        report["roofline_summary"] = roofline.summary()
+        s = report["roofline_summary"]
+        csv.append(("dryrun_cells_ok", s["cells_ok"],
+                    f"failed={s['cells_failed']}"))
+    except FileNotFoundError:
+        print("warning: dryrun_results.json missing; run repro.launch.dryrun",
+              file=sys.stderr)
+
+    out_path = os.path.join(os.path.dirname(__file__), "report.json")
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=1, default=float)
+
+    print("name,us_per_call,derived")
+    for name, us, derived in csv:
+        print(f"{name},{us:.3f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

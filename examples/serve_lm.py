@@ -1,0 +1,63 @@
+"""Batched serving example: prefill a prompt batch, decode with a KV cache.
+
+    PYTHONPATH=src python examples/serve_lm.py
+
+Runs the same ``serve_step`` code paths the 512-chip dry-run compiles
+(prefill + single-token decode against a persistent cache), on a local
+mesh with a reduced h2o-danube config — exercising the sliding-window
+ring cache (the sub-quadratic path that makes long_500k feasible).
+"""
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.configs import ShapeConfig, reduced
+from repro.launch.mesh import make_local_mesh
+from repro.models import layers as L
+from repro.models import model as M
+from repro.train import steps as ST
+
+L.set_compute_dtype(jnp.float32)
+
+cfg = reduced(configs.get_arch("h2o-danube-3-4b"), d_model=256, n_layers=4,
+              n_heads=8, n_kv_heads=4, d_ff=768, vocab=4096, head_dim=32,
+              swa_window=64)
+B, PROMPT, GEN, MAXSEQ = 4, 96, 32, 160
+mesh = make_local_mesh(1, 1)
+shape = ShapeConfig("serve", MAXSEQ, B, "decode")
+prefill, decode, _ = ST.build_serve_steps(cfg, shape, mesh, kv_chunk=32)
+
+with mesh:
+    params = jax.jit(lambda k: M.init_params(k, cfg))(jax.random.PRNGKey(0))
+    cache = jax.jit(lambda: M.init_cache(cfg, B, MAXSEQ))()
+    assert "pos" in cache["attn"], "SWA ring cache active (window=64 < 160)"
+    prompt = jax.random.randint(jax.random.PRNGKey(1), (B, PROMPT), 0, cfg.vocab)
+
+    t0 = time.perf_counter()
+    cache, logits = prefill(params, {"tokens": prompt}, cache)
+    jax.block_until_ready(logits)
+    print(f"prefill: {B} x {PROMPT} tokens in {time.perf_counter()-t0:.2f}s "
+          f"(window={cfg.swa_window}, ring slots={cache['attn']['k'].shape[2]})")
+
+    tok = jnp.argmax(logits, -1)
+    out = [np.asarray(tok)]
+    t0 = time.perf_counter()
+    for i in range(GEN):
+        logits, cache = decode(params, tok, cache, jnp.int32(PROMPT + i))
+        tok = jnp.argmax(logits, -1)
+        out.append(np.asarray(tok))
+    jax.block_until_ready(logits)
+    dt = time.perf_counter() - t0
+    print(f"decode: {GEN} steps x {B} seqs in {dt:.2f}s "
+          f"({GEN*B/dt:.1f} tok/s)")
+    gen = np.stack(out, 1)
+    assert gen.shape == (B, GEN + 1)
+    assert np.isfinite(np.asarray(logits)).all()
+    print("sample token ids:", gen[0][:16].tolist())
+    print("OK")

@@ -1,0 +1,3 @@
+"""Core paper contribution: robust stats algebra, Quantizer Observer,
+E-BST baselines, Hoeffding tree regressor, distributed sketches."""
+from repro.core import stats, qo, ebst, hoeffding, sketch, multi  # noqa: F401

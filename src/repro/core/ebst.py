@@ -1,0 +1,212 @@
+"""E-BST and Truncated E-BST baselines (paper §1/§5) as array BSTs.
+
+Faithful to Ikonomovska et al.'s Extended Binary Search Tree:
+
+* each node stores a key ``x_v`` and target statistics for every
+  observation with ``x <= x_v`` that passed through the node;
+* insertion walks the BST (O(depth)), updating the ``<=`` statistics along
+  the path (here with the robust (n, mean, M2) algebra of §3 instead of the
+  unstable naive sums — the paper upgrades *all* compared AOs this way);
+* the split-candidate query is a faithful in-order traversal with an
+  explicit stack, accumulating left-context statistics exactly like the
+  recursive FIMT algorithm.
+
+TE-BST truncates inputs to ``decimals`` places before insertion (paper §5.2
+uses 3), which bounds the number of distinct keys.
+
+Pointer structures do not exist under ``jit``: nodes live in fixed-capacity
+arrays, children are int32 indices, and both insert and query are
+``lax.while_loop``s.  When capacity is exhausted, further values only update
+statistics along their search path (graceful degradation, noted in
+EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import stats
+from repro.core.qo import SplitResult
+
+EBST = Dict[str, jax.Array]
+
+__all__ = ["init", "update", "best_split", "n_elements"]
+
+_NIL = jnp.int32(-1)
+
+
+def init(capacity: int, decimals: int = -1) -> EBST:
+    """Empty E-BST. ``decimals >= 0`` makes it a TE-BST (truncation)."""
+    cap = capacity
+    return {
+        "key": jnp.zeros((cap,), jnp.float32),
+        "left": jnp.full((cap,), _NIL),
+        "right": jnp.full((cap,), _NIL),
+        "le": stats.init((cap,)),  # stats of values <= key through this node
+        "size": jnp.int32(0),
+        "total": stats.init(()),
+        "decimals": jnp.int32(decimals),
+    }
+
+
+def _quantize_key(t: EBST, x):
+    scale = jnp.power(10.0, t["decimals"].astype(jnp.float32))
+    return jnp.where(t["decimals"] >= 0, jnp.round(x * scale) / scale, x)
+
+
+def _insert_one(t: EBST, x, y):
+    x = _quantize_key(t, jnp.asarray(x, jnp.float32))
+    y = jnp.asarray(y, jnp.float32)
+    cap = t["key"].shape[0]
+
+    t = dict(t, total=stats.observe(t["total"], y))
+
+    def empty_case(t):
+        t = dict(t)
+        t["key"] = t["key"].at[0].set(x)
+        t["le"] = jax.tree.map(lambda a, b: a.at[0].set(b), t["le"],
+                               stats.observe(stats.init(()), y))
+        t["size"] = jnp.int32(1)
+        return t
+
+    def walk_case(t):
+        # state: (cur, done, tree-arrays...)
+        def cond(st):
+            return ~st[1]
+
+        def body(st):
+            cur, _, key, left, right, le, size = st
+            k = key[cur]
+            goes_left = x <= k
+            # update <= statistics when x lands on the left side
+            le = jax.tree.map(
+                lambda a, upd: a.at[cur].set(jnp.where(goes_left, upd, a[cur])),
+                le, stats.observe(jax.tree.map(lambda a: a[cur], le), y))
+            is_eq = x == k
+            child = jnp.where(goes_left, left[cur], right[cur])
+            need_new = (child == _NIL) & ~is_eq
+            can_new = size < cap
+            new_idx = size
+            # create node
+            key = jnp.where(need_new & can_new, key.at[new_idx].set(x), key)
+            # a fresh node's <= statistics hold its own observation (x <= x)
+            le = jax.tree.map(
+                lambda a, b: jnp.where(need_new & can_new, a.at[new_idx].set(b), a),
+                le, stats.observe(stats.init(()), y))
+            # wire parent -> child (only for the branch that was NIL)
+            left = jnp.where(need_new & can_new & goes_left,
+                             left.at[cur].set(new_idx), left)
+            right = jnp.where(need_new & can_new & ~goes_left,
+                              right.at[cur].set(new_idx), right)
+            size = jnp.where(need_new & can_new, size + 1, size)
+            done = is_eq | need_new  # stop on duplicate, new node, or full walk
+            nxt = jnp.where(done, cur, child)
+            return (nxt, done, key, left, right, le, size)
+
+        st = (jnp.int32(0), jnp.bool_(False), t["key"], t["left"], t["right"],
+              t["le"], t["size"])
+        st = jax.lax.while_loop(cond, body, st)
+        out = dict(t)
+        out["key"], out["left"], out["right"], out["le"], out["size"] = st[2:]
+        return out
+
+    return jax.lax.cond(t["size"] == 0, empty_case, walk_case, t)
+
+
+def update(t: EBST, xs, ys) -> EBST:
+    """Sequentially insert a batch (streams are sequential by definition)."""
+    xs = jnp.asarray(xs, jnp.float32).reshape(-1)
+    ys = jnp.asarray(ys, jnp.float32).reshape(-1)
+
+    def body(t, xy):
+        return _insert_one(t, xy[0], xy[1]), None
+
+    t, _ = jax.lax.scan(body, t, jnp.stack([xs, ys], axis=1))
+    return t
+
+
+def n_elements(t: EBST) -> jax.Array:
+    return t["size"]
+
+
+def best_split(t: EBST) -> SplitResult:
+    """Faithful in-order traversal split query (O(n), explicit stack).
+
+    At node v with accumulated ancestor-left context S:
+      left(v)  = merge(S, v.le)           (everything <= key_v)
+      right(v) = total - left(v)          (paper Eqs. 6-7 subtraction)
+    then recurse right with context left(v).
+    """
+    cap = t["key"].shape[0]
+    total = t["total"]
+    s2_d = stats.variance(total)
+    n_tot = jnp.maximum(total["n"], 1.0)
+
+    # stack entries: node idx, phase (0=descend left, 1=emit+descend right),
+    # and the ancestor context stats S
+    stk_node = jnp.zeros((cap + 1,), jnp.int32)
+    stk_phase = jnp.zeros((cap + 1,), jnp.int32)
+    stk_S = stats.init((cap + 1,))
+
+    def push(stk, sp, node, phase, S):
+        stk_node, stk_phase, stk_S = stk
+        stk_node = stk_node.at[sp].set(node)
+        stk_phase = stk_phase.at[sp].set(phase)
+        stk_S = jax.tree.map(lambda a, b: a.at[sp].set(b), stk_S, S)
+        return (stk_node, stk_phase, stk_S), sp + 1
+
+    stk = (stk_node, stk_phase, stk_S)
+    stk, sp = push(stk, 0, jnp.int32(0), jnp.int32(0), stats.init(()))
+    sp = jnp.where(t["size"] > 0, sp, 0)
+
+    init_best = (jnp.float32(-jnp.inf), jnp.float32(0.0))
+
+    def cond(st):
+        return st[1] > 0
+
+    def body(st):
+        stk, sp, best = st
+        sp = sp - 1
+        v = stk[0][sp]
+        phase = stk[1][sp]
+        S = jax.tree.map(lambda a: a[sp], stk[2])
+
+        def descend(args):
+            stk, sp, best = args
+            stk, sp = push(stk, sp, v, jnp.int32(1), S)
+            lc = t["left"][v]
+            stk2, sp2 = push(stk, sp, lc, jnp.int32(0), S)
+            has_left = lc != _NIL
+            stk = jax.tree.map(lambda a, b: jnp.where(has_left, b, a), stk, stk2)
+            sp = jnp.where(has_left, sp2, sp)
+            return stk, sp, best
+
+        def emit(args):
+            stk, sp, best = args
+            left_s = stats.merge(S, jax.tree.map(lambda a: a[v], t["le"]))
+            right_s = stats.subtract(total, left_s)
+            ok = (left_s["n"] > 0) & (right_s["n"] > 0)
+            vr = s2_d - (left_s["n"] / n_tot) * stats.variance(left_s) \
+                      - (right_s["n"] / n_tot) * stats.variance(right_s)
+            score = jnp.where(ok, vr, -jnp.inf)
+            better = score > best[0]
+            best = (jnp.where(better, score, best[0]),
+                    jnp.where(better, t["key"][v], best[1]))
+            rc = t["right"][v]
+            stk2, sp2 = push(stk, sp, rc, jnp.int32(0), left_s)
+            has_right = rc != _NIL
+            stk = jax.tree.map(lambda a, b: jnp.where(has_right, b, a), stk, stk2)
+            sp = jnp.where(has_right, sp2, sp)
+            return stk, sp, best
+
+        return jax.lax.cond(phase == 0, descend, emit, (stk, sp, best))
+
+    stk, sp, best = jax.lax.while_loop(cond, body, (stk, sp, init_best))
+    merit, thr = best
+    valid = jnp.isfinite(merit)
+    return SplitResult(threshold=thr,
+                       merit=jnp.where(valid, merit, 0.0),
+                       valid=valid)

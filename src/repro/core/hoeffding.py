@@ -1,0 +1,241 @@
+"""Batched online Hoeffding tree regressor with QO attribute observers.
+
+The paper's stated destination for QO (§1, §7): FIMT-style Hoeffding tree
+regression where every leaf carries one Attribute Observer per numeric
+feature.  Here the whole tree is a fixed-capacity array structure so that
+
+* routing a batch of instances is a vectorized gather loop (depth-bounded),
+* all (leaf × feature) QO tables update with ONE fused segment-reduction,
+* split attempts evaluate every leaf and feature simultaneously and can
+  expand several leaves per attempt,
+
+which is the TPU-native re-think of the per-instance pointer algorithm
+(DESIGN.md §2).  Growth follows FIRT/FIMT: a leaf splits when the ratio of
+the second-best to best Variance Reduction drops below ``1 - eps`` with
+``eps = sqrt(ln(1/delta) / (2 n))`` (Hoeffding bound, R = 1 for the ratio),
+or when ``eps < tau`` (tie break).
+
+Functional API: ``init_state`` -> ``update`` (learn a batch) -> ``predict``.
+Forests: ``jax.vmap`` over a leading axis of states.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import stats
+from repro.core import qo as qo_lib
+
+TreeState = Dict[str, jax.Array]
+
+__all__ = ["HTRConfig", "init_state", "update", "predict", "n_leaves", "depth_histogram"]
+
+
+@dataclass(frozen=True)
+class HTRConfig:
+    n_features: int
+    max_nodes: int = 127          # total capacity (internal + leaves)
+    n_bins: int = 64              # QO table capacity per (leaf, feature)
+    grace_period: int = 200       # observations between split attempts
+    delta: float = 1e-4           # Hoeffding confidence
+    tau: float = 0.05             # tie-break threshold
+    max_depth: int = 12
+    r0: float = 0.05              # cold-start quantization radius (paper §5.2)
+    sigma_k: float = 2.0          # dynamic radius r = sigma / k for children
+
+
+def init_state(cfg: HTRConfig) -> TreeState:
+    M, F, C = cfg.max_nodes, cfg.n_features, cfg.n_bins
+    return {
+        "feature": jnp.zeros((M,), jnp.int32),
+        "threshold": jnp.zeros((M,), jnp.float32),
+        "child": jnp.full((M, 2), -1, jnp.int32),
+        "is_leaf": jnp.zeros((M,), jnp.bool_).at[0].set(True),
+        "depth": jnp.zeros((M,), jnp.int32),
+        "ystats": stats.init((M,)),          # leaf predictor / variance source
+        "ao_sum_x": jnp.zeros((M, F, C), jnp.float32),
+        "ao_y": stats.init((M, F, C)),       # QO bins per (node, feature)
+        "ao_radius": jnp.full((M, F), cfg.r0, jnp.float32),
+        "ao_origin": jnp.zeros((M, F), jnp.float32),
+        "seen": jnp.zeros((M,), jnp.float32),  # since last split attempt
+        "n_nodes": jnp.int32(1),
+    }
+
+
+def _route(state: TreeState, X: jax.Array, max_depth: int) -> jax.Array:
+    """Leaf index for each row of X.  X: (B, F) -> (B,) int32."""
+    def one(x):
+        def body(_, node):
+            f = state["feature"][node]
+            go_left = x[f] <= state["threshold"][node]
+            nxt = jnp.where(go_left, state["child"][node, 0],
+                            state["child"][node, 1])
+            return jnp.where(state["is_leaf"][node], node, nxt)
+        return jax.lax.fori_loop(0, max_depth + 1, body, jnp.int32(0))
+    return jax.vmap(one)(X)
+
+
+def predict(cfg: HTRConfig, state: TreeState, X: jax.Array) -> jax.Array:
+    """Mean-of-leaf (centroid) prediction, the paper's §2 framing."""
+    leaf = _route(state, X, cfg.max_depth)
+    return state["ystats"]["mean"][leaf]
+
+
+def _ao_bin_ids(state: TreeState, leaf, X, C):
+    """(B, F) bin ids in each row's leaf tables."""
+    r = state["ao_radius"][leaf]        # (B, F)
+    o = state["ao_origin"][leaf]        # (B, F)
+    h = jnp.floor((X - o) / r).astype(jnp.int32) + C // 2
+    return jnp.clip(h, 0, C - 1)
+
+
+def _segment_stats(vals_y, seg, num):
+    """Exact per-segment (n, mean, M2) from a flat batch."""
+    w = jnp.ones_like(vals_y)
+    n = jax.ops.segment_sum(w, seg, num)
+    sy = jax.ops.segment_sum(vals_y, seg, num)
+    syy = jax.ops.segment_sum(vals_y * vals_y, seg, num)
+    safe = jnp.where(n > 0, n, 1.0)
+    mean = sy / safe
+    m2 = jnp.maximum(syy - n * mean * mean, 0.0)
+    return {"n": n, "mean": jnp.where(n > 0, mean, 0.0), "m2": m2}
+
+
+def update(cfg: HTRConfig, state: TreeState, X: jax.Array, y: jax.Array) -> TreeState:
+    """Learn one batch: route, absorb statistics, attempt splits."""
+    M, F, C = cfg.max_nodes, cfg.n_features, cfg.n_bins
+    X = jnp.asarray(X, jnp.float32)
+    y = jnp.asarray(y, jnp.float32).reshape(-1)
+    B = y.shape[0]
+
+    leaf = _route(state, X, cfg.max_depth)                      # (B,)
+
+    # --- leaf target statistics (predictor + split-variance source) ------
+    batch_leaf = _segment_stats(y, leaf, M)
+    state = dict(state, ystats=stats.merge(state["ystats"], batch_leaf))
+
+    # --- one fused QO update for every (leaf, feature) table -------------
+    bins = _ao_bin_ids(state, leaf, X, C)                       # (B, F)
+    seg = (leaf[:, None] * F + jnp.arange(F)[None, :]) * C + bins
+    seg = seg.reshape(-1)                                       # (B*F,)
+    y_rep = jnp.repeat(y, F)
+    x_flat = X.reshape(-1)
+    tile = _segment_stats(y_rep, seg, M * F * C)
+    tile = jax.tree.map(lambda a: a.reshape(M, F, C), tile)
+    sum_x = jax.ops.segment_sum(x_flat, seg, M * F * C).reshape(M, F, C)
+    state = dict(
+        state,
+        ao_y=stats.merge(state["ao_y"], tile),
+        ao_sum_x=state["ao_sum_x"] + sum_x,
+        seen=state["seen"] + batch_leaf["n"],
+    )
+
+    # --- split attempts ---------------------------------------------------
+    attempt = state["is_leaf"] & (state["seen"] >= cfg.grace_period) \
+        & (state["depth"] < cfg.max_depth)
+
+    def do_attempts(state):
+        table = {
+            "radius": state["ao_radius"],     # (M, F) — broadcast leaves
+            "origin": state["ao_origin"],
+            "sum_x": state["ao_sum_x"],       # (M, F, C)
+            "y": state["ao_y"],
+        }
+        split = jax.vmap(jax.vmap(
+            lambda r, o, sx, yb: qo_lib.best_split(
+                {"radius": r, "origin": o, "sum_x": sx, "y": yb})))(
+            table["radius"], table["origin"], table["sum_x"], table["y"])
+        merit = jnp.where(split.valid, split.merit, -jnp.inf)   # (M, F)
+
+        top2 = jax.lax.top_k(merit, 2)[0]                       # (M, 2)
+        best_f = jnp.argmax(merit, axis=1)                      # (M,)
+        best_c = split.threshold[jnp.arange(M), best_f]
+        vr1, vr2 = top2[:, 0], top2[:, 1]
+        n_leaf = jnp.maximum(state["ystats"]["n"], 1.0)
+        eps = jnp.sqrt(jnp.log(1.0 / cfg.delta) / (2.0 * n_leaf))
+        ratio = jnp.where(vr1 > 0, jnp.maximum(vr2, 0.0) / vr1, 1.0)
+        decide = (ratio < 1.0 - eps) | (eps < cfg.tau)
+        want = attempt & decide & jnp.isfinite(vr1) & (vr1 > 0)
+
+        # vectorized allocation of 2 children per splitting leaf
+        k = jnp.cumsum(want.astype(jnp.int32)) - 1
+        base = state["n_nodes"] + 2 * k
+        can = want & (base + 1 < M)
+        lidx = jnp.where(can, jnp.arange(M), M)        # M = dropped scatter
+        c0, c1 = base, base + 1
+        c0i = jnp.where(can, c0, M)
+        c1i = jnp.where(can, c1, M)
+
+        st = dict(state)
+        st["feature"] = st["feature"].at[lidx].set(best_f, mode="drop")
+        st["threshold"] = st["threshold"].at[lidx].set(best_c, mode="drop")
+        st["child"] = st["child"].at[lidx, 0].set(c0, mode="drop")
+        st["child"] = st["child"].at[lidx, 1].set(c1, mode="drop")
+        st["is_leaf"] = st["is_leaf"].at[lidx].set(False, mode="drop")
+        st["seen"] = st["seen"].at[lidx].set(0.0, mode="drop")
+
+        child_depth = state["depth"] + 1
+        for ci in (c0i, c1i):
+            st["is_leaf"] = st["is_leaf"].at[ci].set(True, mode="drop")
+            st["depth"] = st["depth"].at[ci].set(child_depth, mode="drop")
+            st["child"] = st["child"].at[ci].set(-1, mode="drop")
+            st["seen"] = st["seen"].at[ci].set(0.0, mode="drop")
+
+        # children INHERIT the split halves' target statistics, recovered
+        # from the winning feature's QO bins with the paper's subtraction
+        # (Eqs. 6-7) — fresh leaves predict sensibly from step one
+        idxM = jnp.arange(M)
+        bins_f = jax.tree.map(lambda a: a[idxM, best_f], state["ao_y"])  # (M,C)
+        sumx_f = state["ao_sum_x"][idxM, best_f]
+        occ_f = bins_f["n"] > 0
+        proto_f = jnp.where(occ_f, sumx_f / jnp.where(occ_f, bins_f["n"], 1.0),
+                            jnp.inf)
+        maskL = occ_f & (proto_f <= best_c[:, None])
+        left = stats.tree_reduce_merge(
+            jax.tree.map(lambda a: jnp.where(maskL, a, 0.0), bins_f), axis=1)
+        total_b = stats.tree_reduce_merge(bins_f, axis=1)
+        right = stats.subtract(total_b, left)
+        st["ystats"] = jax.tree.map(
+            lambda a, v: a.at[c0i].set(v, mode="drop"), st["ystats"], left)
+        st["ystats"] = jax.tree.map(
+            lambda a, v: a.at[c1i].set(v, mode="drop"), st["ystats"], right)
+
+        # children inherit a dynamic radius r = sigma_x / k from the parent's
+        # per-feature x distribution estimated off the QO bins (paper §5.2)
+        occ = state["ao_y"]["n"]                                  # (M, F, C)
+        nb = jnp.maximum(occ, 1.0)
+        proto = jnp.where(occ > 0, state["ao_sum_x"] / nb, 0.0)
+        n_f = occ.sum(-1)
+        mean_x = (occ * proto).sum(-1) / jnp.maximum(n_f, 1.0)
+        var_x = (occ * (proto - mean_x[..., None]) ** 2).sum(-1) / jnp.maximum(n_f - 1.0, 1.0)
+        sigma = jnp.sqrt(jnp.maximum(var_x, 1e-12))               # (M, F)
+        child_r = jnp.maximum(sigma / cfg.sigma_k, 1e-6)
+        for ci in (c0i, c1i):
+            st["ao_radius"] = st["ao_radius"].at[ci].set(child_r, mode="drop")
+            st["ao_origin"] = st["ao_origin"].at[ci].set(mean_x, mode="drop")
+            st["ao_sum_x"] = st["ao_sum_x"].at[ci].set(0.0, mode="drop")
+            st["ao_y"] = jax.tree.map(
+                lambda a: a.at[ci].set(0.0, mode="drop"), st["ao_y"])
+
+        st["n_nodes"] = state["n_nodes"] + 2 * jnp.sum(can.astype(jnp.int32))
+        # failed attempts still reset the grace counter
+        st["seen"] = jnp.where(attempt & ~can, 0.0, st["seen"])
+        return st
+
+    return jax.lax.cond(attempt.any(), do_attempts, lambda s: dict(s), state)
+
+
+def n_leaves(state: TreeState) -> jax.Array:
+    active = jnp.arange(state["is_leaf"].shape[0]) < state["n_nodes"]
+    return (state["is_leaf"] & active).sum()
+
+
+def depth_histogram(state: TreeState) -> jax.Array:
+    active = jnp.arange(state["is_leaf"].shape[0]) < state["n_nodes"]
+    return jax.ops.segment_sum(
+        (state["is_leaf"] & active).astype(jnp.int32),
+        state["depth"], 32)

@@ -1,0 +1,181 @@
+"""Quantizer Observer (QO) — the paper's core contribution (§4), TPU-native.
+
+Differences from the CPython artifact (see DESIGN.md §2):
+
+* the dynamic hash ``H`` becomes a fixed-capacity **dense bin table**.  Bin
+  ids are ``floor(x / r) - origin`` clipped into ``[0, capacity)``; dense
+  ids arrive pre-sorted so the paper's ``sorted(H)`` sweep becomes a plain
+  prefix scan (cheaper than the paper's O(|H| log |H|)).
+* insertion is **batched**: a tile of (x, y) observations is folded into the
+  table with one segment-reduction (O(1) amortized per element, one stream
+  over the tile).  The per-bin target statistics use the robust
+  (n, mean, M2) algebra of :mod:`repro.core.stats` instead of the unstable
+  naive sums — exactly the paper's §3 upgrade.
+* the split-candidate query (Algorithm 2) is an inclusive prefix scan with
+  the Chan merge operator followed by a VR argmax, evaluated for all |H|-1
+  candidate cut points at once.
+
+A QO table is a dict pytree, so trees/forests vmap over leading axes and
+tables merge across devices with ``lax`` collectives (``repro.core.sketch``).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import stats
+
+QOTable = Dict[str, jax.Array]
+
+__all__ = [
+    "init",
+    "update",
+    "best_split",
+    "merge_tables",
+    "n_slots",
+    "total_stats",
+    "SplitResult",
+]
+
+
+def init(capacity: int, radius: float, origin: float = 0.0) -> QOTable:
+    """Create an empty QO table.
+
+    capacity: number of bins (paper: dynamic |H|; here fixed, |H| <= capacity)
+    radius:   quantization radius r (paper §4); bin id = floor(x/r)
+    origin:   value mapped to the middle bin (lets one table cover negative x)
+    """
+    f = jnp.zeros((capacity,), jnp.float32)
+    return {
+        "radius": jnp.asarray(radius, jnp.float32),
+        "origin": jnp.asarray(origin, jnp.float32),
+        "sum_x": f,  # Σx per bin -> prototype = sum_x / n
+        "y": stats.init((capacity,)),  # robust (n, mean, M2) of targets
+    }
+
+
+def _bin_ids(table: QOTable, x: jax.Array) -> jax.Array:
+    cap = table["sum_x"].shape[0]
+    # h = floor(x / r), shifted so `origin` lands mid-table, clipped to edges
+    h = jnp.floor((x - table["origin"]) / table["radius"]).astype(jnp.int32)
+    return jnp.clip(h + cap // 2, 0, cap - 1)
+
+
+def update(table: QOTable, x: jax.Array, y: jax.Array, w=None) -> QOTable:
+    """Fold a batch of observations into the table (paper Algorithm 1).
+
+    Equivalent to looping Algorithm 1 over the tile, but executed as one
+    segment-reduction: per bin we build exact tile statistics and merge
+    them into the stored statistics with Chan's formulas.
+    """
+    x = jnp.asarray(x, jnp.float32).reshape(-1)
+    y = jnp.asarray(y, jnp.float32).reshape(-1)
+    w = jnp.ones_like(x) if w is None else jnp.asarray(w, jnp.float32).reshape(-1)
+    cap = table["sum_x"].shape[0]
+    ids = _bin_ids(table, x)
+
+    n_b = jax.ops.segment_sum(w, ids, cap)
+    sx_b = jax.ops.segment_sum(w * x, ids, cap)
+    sy_b = jax.ops.segment_sum(w * y, ids, cap)
+    safe_n = jnp.where(n_b > 0, n_b, 1.0)
+    mean_b = jnp.where(n_b > 0, sy_b / safe_n, 0.0)
+    # two-pass M2 (residuals against the tile bin mean) — exact within the
+    # tile, avoiding the sum-of-squares cancellation the paper warns about
+    m2_b = jax.ops.segment_sum(w * (y - mean_b[ids]) ** 2, ids, cap)
+    tile = {"n": n_b, "mean": mean_b, "m2": m2_b}
+
+    return {
+        "radius": table["radius"],
+        "origin": table["origin"],
+        "sum_x": table["sum_x"] + sx_b,
+        "y": stats.merge(table["y"], tile),
+    }
+
+
+class SplitResult(NamedTuple):
+    threshold: jax.Array  # best cut point c
+    merit: jax.Array      # VR value at c (paper Eq. 1)
+    valid: jax.Array      # bool: at least two occupied bins existed
+
+
+def total_stats(table: QOTable) -> stats.Stats:
+    """Whole-sample target statistics (merge of every bin)."""
+    return stats.tree_reduce_merge(table["y"], axis=0)
+
+
+def n_slots(table: QOTable) -> jax.Array:
+    """|H| — number of occupied bins (the paper's memory metric)."""
+    return (table["y"]["n"] > 0).sum()
+
+
+def best_split(table: QOTable) -> SplitResult:
+    """Paper Algorithm 2 — evaluate every boundary between occupied bins.
+
+    Candidate cut points are midpoints between prototypes of consecutive
+    occupied bins; VR is computed from the prefix statistics (left side)
+    and their complement obtained with the paper's subtraction (Eqs. 6-7).
+    """
+    ybins = table["y"]
+    occ = ybins["n"] > 0
+    cap = occ.shape[0]
+
+    # inclusive prefix merge of bin statistics with the Chan operator
+    left = jax.lax.associative_scan(stats.merge, ybins)
+    tot = jax.tree.map(lambda x: x[-1], left)
+    right = stats.subtract(jax.tree.map(lambda x: jnp.broadcast_to(x, (cap,)), tot), left)
+
+    n_tot = jnp.maximum(tot["n"], 1.0)
+    s2_d = stats.variance(tot)
+    vr = s2_d - (left["n"] / n_tot) * stats.variance(left) \
+              - (right["n"] / n_tot) * stats.variance(right)
+
+    # prototype x value per occupied bin
+    proto = jnp.where(occ, table["sum_x"] / jnp.where(occ, ybins["n"], 1.0), 0.0)
+    idx = jnp.arange(cap)
+    # last occupied index at-or-before i (forward max-scan) ...
+    last_occ = jax.lax.associative_scan(jnp.maximum, jnp.where(occ, idx, -1))
+    # ... and first occupied index at-or-after i (reverse min-scan)
+    first_occ_from = jax.lax.associative_scan(
+        jnp.minimum, jnp.where(occ, idx, cap)[::-1])[::-1]
+    # first occupied index strictly after i
+    nxt = jnp.concatenate([first_occ_from[1:], jnp.full((1,), cap)])
+    # a boundary after bin i is valid iff an occupied bin exists on each side
+    boundary_ok = (last_occ >= 0) & (nxt < cap)
+
+    proto_left = proto[jnp.maximum(last_occ, 0)]
+    proto_right = proto[jnp.minimum(nxt, cap - 1)]
+    cand = 0.5 * (proto_left + proto_right)
+
+    score = jnp.where(boundary_ok, vr, -jnp.inf)
+    best = jnp.argmax(score)
+    return SplitResult(
+        threshold=cand[best],
+        merit=jnp.where(jnp.isfinite(score[best]), score[best], 0.0),
+        valid=boundary_ok.any(),
+    )
+
+
+def merge_tables(a: QOTable, b: QOTable) -> QOTable:
+    """Merge two same-shape QO tables (distributed estimation, DESIGN §4)."""
+    return {
+        "radius": a["radius"],
+        "origin": a["origin"],
+        "sum_x": a["sum_x"] + b["sum_x"],
+        "y": stats.merge(a["y"], b["y"]),
+    }
+
+
+@functools.partial(jax.jit, static_argnames=("capacity",))
+def auto_radius(x_sample: jax.Array, capacity: int, k: float = 2.0) -> Tuple[jax.Array, jax.Array]:
+    """Paper's dynamic radius policy: r = sigma / k, origin = sample mean.
+
+    In a tree, sigma comes from the leaf's running variance estimator (the
+    tree already keeps one per leaf, paper §5.2); here we bootstrap from a
+    warmup sample.  Also returns an origin so the table covers the data.
+    """
+    s = stats.from_batch(x_sample.reshape(-1))
+    sigma = jnp.sqrt(jnp.maximum(stats.variance(s), 1e-12))
+    return sigma / k, s["mean"]

@@ -1,0 +1,164 @@
+"""Robust incremental (weighted) mean/variance algebra — paper §3.
+
+Implements Welford's update (Eqs. 2-3), the Chan et al. parallel *merge*
+(Eqs. 4-5) and the paper's new *subtraction* of partial estimates
+(Eqs. 6-7), all as pure, vectorized JAX functions over a (n, mean, M2)
+triple.  The triple is carried as a plain dict pytree so it shards, vmaps
+and scans transparently.
+
+The merge operator is associative and commutative, which makes it a legal
+XLA/collective reduction operator: it powers the cross-device sketch
+merges in ``repro.core.sketch`` and the prefix scans used by the QO split
+query.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+Stats = Dict[str, jax.Array]  # {"n": f, "mean": f, "m2": f}
+
+__all__ = [
+    "init",
+    "from_single",
+    "observe",
+    "merge",
+    "subtract",
+    "variance",
+    "stddev",
+    "zeros_like",
+    "from_batch",
+]
+
+
+def init(shape=(), dtype=jnp.float32) -> Stats:
+    """Empty statistics (n=0). Identity element of :func:`merge`."""
+    z = jnp.zeros(shape, dtype)
+    return {"n": z, "mean": z, "m2": z}
+
+
+def zeros_like(s: Stats) -> Stats:
+    return jax.tree.map(jnp.zeros_like, s)
+
+
+def from_single(y, w=1.0) -> Stats:
+    """Statistics of a single (optionally weighted) observation."""
+    y = jnp.asarray(y, jnp.float32)
+    w = jnp.broadcast_to(jnp.asarray(w, jnp.float32), y.shape)
+    return {"n": w, "mean": y, "m2": jnp.zeros_like(y)}
+
+
+def observe(s: Stats, y, w=1.0) -> Stats:
+    """Welford single-observation update (paper Eqs. 2-3), weighted.
+
+    mean_n = mean_{n-1} + w*(y - mean_{n-1})/n
+    M2_n   = M2_{n-1} + w*(y - mean_{n-1})*(y - mean_n)
+    """
+    y = jnp.asarray(y, jnp.float32)
+    w = jnp.asarray(w, jnp.float32)
+    n = s["n"] + w
+    safe_n = jnp.where(n > 0, n, 1.0)
+    d_pre = y - s["mean"]
+    mean = s["mean"] + w * d_pre / safe_n
+    m2 = s["m2"] + w * d_pre * (y - mean)
+    return {"n": n, "mean": mean, "m2": m2}
+
+
+def merge(a: Stats, b: Stats) -> Stats:
+    """Chan et al. parallel merge (paper Eqs. 4-5); handles empty operands.
+
+    n_AB    = n_A + n_B
+    mean_AB = (n_A mean_A + n_B mean_B) / n_AB
+    M2_AB   = M2_A + M2_B + delta^2 * n_A n_B / n_AB
+    """
+    n = a["n"] + b["n"]
+    safe_n = jnp.where(n > 0, n, 1.0)
+    delta = b["mean"] - a["mean"]
+    mean = (a["n"] * a["mean"] + b["n"] * b["mean"]) / safe_n
+    m2 = a["m2"] + b["m2"] + delta * delta * (a["n"] * b["n"]) / safe_n
+    # keep the identity exact when both sides are empty
+    mean = jnp.where(n > 0, mean, 0.0)
+    m2 = jnp.where(n > 0, m2, 0.0)
+    return {"n": n, "mean": mean, "m2": m2}
+
+
+def subtract(ab: Stats, b: Stats) -> Stats:
+    """Paper Eqs. 6-7: recover A = AB - B from whole and partial stats.
+
+    n_A    = n_AB - n_B
+    mean_A = (n_AB mean_AB - n_B mean_B) / n_A
+    M2_A   = M2_AB - M2_B - delta^2 * n_A n_B / n_AB
+    with delta = mean_B - mean_A.
+    """
+    n_a = ab["n"] - b["n"]
+    safe_na = jnp.where(n_a > 0, n_a, 1.0)
+    mean_a = (ab["n"] * ab["mean"] - b["n"] * b["mean"]) / safe_na
+    delta = b["mean"] - mean_a
+    safe_nab = jnp.where(ab["n"] > 0, ab["n"], 1.0)
+    m2_a = ab["m2"] - b["m2"] - delta * delta * (n_a * b["n"]) / safe_nab
+    mean_a = jnp.where(n_a > 0, mean_a, 0.0)
+    # numerical floor: M2 is a sum of squares, clamp tiny negatives
+    m2_a = jnp.where(n_a > 0, jnp.maximum(m2_a, 0.0), 0.0)
+    return {"n": n_a, "mean": mean_a, "m2": m2_a}
+
+
+def variance(s: Stats, ddof: int = 1) -> jax.Array:
+    """Sample variance s^2 = M2/(n-ddof); 0 where undefined (n<=ddof)."""
+    denom = s["n"] - ddof
+    return jnp.where(denom > 0, s["m2"] / jnp.where(denom > 0, denom, 1.0), 0.0)
+
+
+def stddev(s: Stats, ddof: int = 1) -> jax.Array:
+    return jnp.sqrt(jnp.maximum(variance(s, ddof), 0.0))
+
+
+def from_batch(y: jax.Array, w=None, axis=0) -> Stats:
+    """Exact batch statistics along ``axis`` (two-pass; used for oracles and
+    for folding a whole tile into one Stats before a merge)."""
+    y = jnp.asarray(y, jnp.float32)
+    if w is None:
+        n = jnp.asarray(y.shape[axis], jnp.float32)
+        n = jnp.broadcast_to(n, y.sum(axis=axis).shape)
+        mean = y.mean(axis=axis)
+        m2 = ((y - jnp.expand_dims(mean, axis)) ** 2).sum(axis=axis)
+        return {"n": n, "mean": mean, "m2": m2}
+    w = jnp.asarray(w, jnp.float32)
+    n = w.sum(axis=axis)
+    safe_n = jnp.where(n > 0, n, 1.0)
+    mean = (w * y).sum(axis=axis) / safe_n
+    m2 = (w * (y - jnp.expand_dims(mean, axis)) ** 2).sum(axis=axis)
+    mean = jnp.where(n > 0, mean, 0.0)
+    return {"n": n, "mean": mean, "m2": m2}
+
+
+def stack(stats_list) -> Stats:
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *stats_list)
+
+
+def tree_reduce_merge(s: Stats, axis=0) -> Stats:
+    """Reduce a stacked Stats along ``axis`` with the Chan merge.
+
+    Uses a log-depth pairwise tree (matches how a real all-reduce combines
+    partial estimates and is the numerically preferred order).
+    """
+    def move(s_):
+        return jax.tree.map(lambda x: jnp.moveaxis(x, axis, 0), s_)
+
+    s = move(s)
+
+    def body(s_):
+        k = s_["n"].shape[0]
+        half = k // 2
+        a = jax.tree.map(lambda x: x[:half], s_)
+        b = jax.tree.map(lambda x: x[half : 2 * half], s_)
+        m = merge(a, b)
+        if k % 2:
+            tail = jax.tree.map(lambda x: x[-1:], s_)
+            m = jax.tree.map(lambda x, t: jnp.concatenate([x, t], 0), m, tail)
+        return m
+
+    while s["n"].shape[0] > 1:
+        s = body(s)
+    return jax.tree.map(lambda x: x[0], s)

@@ -1,0 +1,65 @@
+"""Public jit'd wrappers over the Pallas QO kernels.
+
+On TPU these run the compiled kernels; elsewhere (this container) they run
+the same kernel bodies under ``interpret=True`` (Pallas' CPU interpreter),
+which is how correctness is validated against :mod:`repro.kernels.ref`.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import qo as qo_lib
+from repro.kernels import ref as _ref
+from repro.kernels.qo_update import qo_update_pallas
+from repro.kernels.qo_query import qo_query_pallas
+
+__all__ = ["qo_update", "qo_best_split", "default_interpret"]
+
+
+def default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(arr, mult, fill=0.0):
+    n = arr.shape[0]
+    rem = (-n) % mult
+    if rem == 0:
+        return arr
+    return jnp.concatenate([arr, jnp.full((rem,), fill, arr.dtype)])
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "interpret"))
+def qo_update(table: qo_lib.QOTable, x, y, w=None, *, tile: int = 1024,
+              interpret: bool | None = None) -> qo_lib.QOTable:
+    """Kernel-backed equivalent of :func:`repro.core.qo.update`."""
+    interpret = default_interpret() if interpret is None else interpret
+    x = jnp.asarray(x, jnp.float32).reshape(-1)
+    y = jnp.asarray(y, jnp.float32).reshape(-1)
+    w = jnp.ones_like(x) if w is None else jnp.asarray(w, jnp.float32).reshape(-1)
+    tile = min(tile, max(128, 1 << (int(x.shape[0]) - 1).bit_length()))
+    xp, yp, wp = _pad_to(x, tile), _pad_to(y, tile), _pad_to(w, tile)
+
+    dense, scal = _ref.pack_table(table)
+    dense = qo_update_pallas(dense, scal, xp, yp, wp, tile=tile,
+                             interpret=interpret)
+    return _ref.unpack_table(dense, scal)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def qo_best_split(table: qo_lib.QOTable, *,
+                  interpret: bool | None = None) -> qo_lib.SplitResult:
+    """Kernel-backed equivalent of :func:`repro.core.qo.best_split`."""
+    interpret = default_interpret() if interpret is None else interpret
+    dense, _ = _ref.pack_table(table)
+    out = qo_query_pallas(dense, interpret=interpret)
+    score, cand = out[0], out[1]
+    best = jnp.argmax(score)
+    valid = jnp.isfinite(score[best])
+    return qo_lib.SplitResult(
+        threshold=cand[best],
+        merit=jnp.where(valid, score[best], 0.0),
+        valid=valid,
+    )

@@ -1,0 +1,127 @@
+"""Pallas TPU kernel for the QO split-candidate query (paper Algorithm 2).
+
+Dense bin ids arrive pre-sorted, so the paper's ``sorted(H)`` sweep becomes
+an inclusive prefix *merge* over the lane dimension.  The Chan merge is
+associative, so the scan is computed with log2(C) Hillis-Steele steps of
+shift + merge — all vectorized over the C lanes, no sequential loop.
+
+For every boundary i (split between bin i and the next occupied bin) the
+kernel evaluates the Variance Reduction
+
+    VR_i = s2(d) - nL/n * s2(left_i) - nR/n * s2(right_i)
+
+with right = total - left via the paper's subtraction (Eqs. 6-7), plus the
+candidate threshold (midpoint of neighbouring occupied prototypes, as in
+Algorithm 2).  Outputs (8, C) f32: row 0 = VR scores (-inf where invalid),
+row 1 = candidate thresholds.  The argmax is a trivial epilogue in ops.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.qo_update import ROW_N, ROW_MEAN, ROW_M2, ROW_SUMX, TABLE_ROWS
+
+
+def _shift_right(arr, d, fill):
+    """arr shifted right by static d along its (only) axis, filled left."""
+    pad = jnp.full((d,), fill, arr.dtype)
+    return jnp.concatenate([pad, arr[:-d]])
+
+
+def _merge(n_a, mean_a, m2_a, n_b, mean_b, m2_b):
+    n = n_a + n_b
+    safe = jnp.where(n > 0, n, 1.0)
+    delta = mean_b - mean_a
+    mean = jnp.where(n > 0, (n_a * mean_a + n_b * mean_b) / safe, 0.0)
+    m2 = jnp.where(n > 0, m2_a + m2_b + delta * delta * (n_a * n_b) / safe, 0.0)
+    return n, mean, m2
+
+
+def _qo_query_kernel(tab_ref, out_ref):
+    cap = tab_ref.shape[1]
+    n = tab_ref[ROW_N, :]
+    mean = tab_ref[ROW_MEAN, :]
+    m2 = tab_ref[ROW_M2, :]
+    sum_x = tab_ref[ROW_SUMX, :]
+    occ = n > 0
+
+    # ---- inclusive prefix merge (Hillis-Steele over lanes) ---------------
+    pn, pmean, pm2 = n, mean, m2
+    d = 1
+    while d < cap:
+        sn = _shift_right(pn, d, 0.0)
+        smean = _shift_right(pmean, d, 0.0)
+        sm2 = _shift_right(pm2, d, 0.0)
+        pn, pmean, pm2 = _merge(sn, smean, sm2, pn, pmean, pm2)
+        d *= 2
+
+    tot_n = pn[cap - 1]
+    tot_mean = pmean[cap - 1]
+    tot_m2 = pm2[cap - 1]
+
+    # ---- complement via the paper's subtraction (Eqs. 6-7) ---------------
+    rn = tot_n - pn
+    safe_rn = jnp.where(rn > 0, rn, 1.0)
+    rmean = jnp.where(rn > 0, (tot_n * tot_mean - pn * pmean) / safe_rn, 0.0)
+    delta = pmean - rmean
+    safe_tot = jnp.where(tot_n > 0, tot_n, 1.0)
+    rm2 = tot_m2 - pm2 - delta * delta * (rn * pn) / safe_tot
+    rm2 = jnp.where(rn > 0, jnp.maximum(rm2, 0.0), 0.0)
+
+    def var(nn, mm2):
+        d_ = nn - 1.0
+        return jnp.where(d_ > 0, mm2 / jnp.where(d_ > 0, d_, 1.0), 0.0)
+
+    s2_d = jnp.where(tot_n > 1, tot_m2 / jnp.maximum(tot_n - 1.0, 1.0), 0.0)
+    n_tot = jnp.maximum(tot_n, 1.0)
+    vr = s2_d - (pn / n_tot) * var(pn, pm2) - (rn / n_tot) * var(rn, rm2)
+
+    # ---- candidate thresholds & validity ---------------------------------
+    lane = jax.lax.broadcasted_iota(jnp.int32, (1, cap), 1)[0, :]
+    # last occupied index at-or-before i: max-scan of (occ ? lane : -1)
+    lastv = jnp.where(occ, lane, -1)
+    d = 1
+    while d < cap:
+        lastv = jnp.maximum(lastv, _shift_right(lastv, d, -1))
+        d *= 2
+    # first occupied index at-or-after i: cap - 1 - reversed-max-scan trick
+    firstv = jnp.where(occ, lane, 2 * cap)
+    d = 1
+    while d < cap:
+        shifted = jnp.concatenate([firstv[d:], jnp.full((d,), 2 * cap, firstv.dtype)])
+        firstv = jnp.minimum(firstv, shifted)
+        d *= 2
+    nxt = jnp.concatenate([firstv[1:], jnp.full((1,), 2 * cap, firstv.dtype)])
+    ok = (lastv >= 0) & (nxt < cap)
+
+    proto = jnp.where(occ, sum_x / jnp.where(occ, n, 1.0), 0.0)
+    gather_l = jnp.sum(
+        jnp.where(lane[None, :] == jnp.maximum(lastv, 0)[:, None], proto[None, :], 0.0),
+        axis=1)
+    gather_r = jnp.sum(
+        jnp.where(lane[None, :] == jnp.minimum(nxt, cap - 1)[:, None], proto[None, :], 0.0),
+        axis=1)
+    cand = 0.5 * (gather_l + gather_r)
+
+    out_ref[0, :] = jnp.where(ok, vr, -jnp.inf)
+    out_ref[1, :] = cand
+    zero = jnp.zeros((cap,), jnp.float32)
+    for r in range(2, TABLE_ROWS):
+        out_ref[r, :] = zero
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def qo_query_pallas(table: jax.Array, *, interpret: bool = False) -> jax.Array:
+    """table: (8, C) -> (8, C): row 0 = VR scores, row 1 = thresholds."""
+    cap = table.shape[1]
+    return pl.pallas_call(
+        _qo_query_kernel,
+        in_specs=[pl.BlockSpec((TABLE_ROWS, cap), lambda: (0, 0))],
+        out_specs=pl.BlockSpec((TABLE_ROWS, cap), lambda: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((TABLE_ROWS, cap), jnp.float32),
+        interpret=interpret,
+    )(table)

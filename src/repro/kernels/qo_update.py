@@ -1,0 +1,121 @@
+"""Pallas TPU kernel for the QO update (paper Algorithm 1).
+
+TPU adaptation (DESIGN.md §2): the per-instance hash insert becomes a
+tile-streaming accumulation.  Each grid step loads a (1, T) tile of
+observations into VMEM, quantizes to bin ids, expands to a one-hot
+(T, C) matrix and reduces with MXU matmuls:
+
+    n_b   = 1^T @ onehot          sum_x_b = x^T @ onehot
+    sy_b  = y^T @ onehot          syy_b   = (y*y)^T @ onehot
+
+The per-tile exact statistics are then folded into the running (n, mean,
+M2) table with the Chan merge (paper Eqs. 4-5) — the same operator the
+reference uses, so kernel and oracle agree to float tolerance.
+
+The bin table lives in the output ref with a constant index map, so it
+persists across the (sequential) TPU grid steps; step 0 seeds it from the
+input table, making the kernel resumable across calls.
+
+Table layout (row-major, lane dim = C, a multiple of 128):
+    row 0: n      row 1: mean      row 2: M2      row 3: sum_x
+    rows 4-7: zero padding for (8, 128) tiling alignment.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TABLE_ROWS = 8  # padded sublane dim
+ROW_N, ROW_MEAN, ROW_M2, ROW_SUMX = 0, 1, 2, 3
+
+
+def _qo_update_kernel(scal_ref, x_ref, y_ref, w_ref, tab_ref, out_ref):
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _seed():
+        out_ref[...] = tab_ref[...]
+
+    cap = out_ref.shape[1]
+    radius = scal_ref[0, 0]
+    origin = scal_ref[0, 1]
+
+    x = x_ref[0, :]
+    y = y_ref[0, :]
+    w = w_ref[0, :]
+
+    ids = jnp.floor((x - origin) / radius).astype(jnp.int32) + cap // 2
+    ids = jnp.clip(ids, 0, cap - 1)
+
+    # one-hot expansion -> MXU reductions (T, C) x (T,) contractions
+    lanes = jax.lax.broadcasted_iota(jnp.int32, (x.shape[0], cap), 1)
+    mask = (lanes == ids[:, None])
+    onehot = jnp.where(mask, w[:, None], 0.0).astype(jnp.float32)
+
+    n_b = jnp.sum(onehot, axis=0)
+    sx_b = jax.lax.dot_general(x, onehot, (((0,), (0,)), ((), ())),
+                               preferred_element_type=jnp.float32)
+    sy_b = jax.lax.dot_general(y, onehot, (((0,), (0,)), ((), ())),
+                               preferred_element_type=jnp.float32)
+
+    safe = jnp.where(n_b > 0, n_b, 1.0)
+    mean_b = jnp.where(n_b > 0, sy_b / safe, 0.0)
+    # two-pass M2: the tile is VMEM-resident, so gather each element's bin
+    # mean back (one more MXU matvec) and reduce squared residuals exactly —
+    # avoids the sum-of-squares cancellation the paper warns about (§1)
+    mean_i = jax.lax.dot_general(mask.astype(jnp.float32), mean_b,
+                                 (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    resid = (y - mean_i)
+    m2_b = jax.lax.dot_general(resid * resid, onehot, (((0,), (0,)), ((), ())),
+                               preferred_element_type=jnp.float32)
+
+    # Chan merge (Eqs. 4-5) of the tile stats into the running table
+    n0 = out_ref[ROW_N, :]
+    mean0 = out_ref[ROW_MEAN, :]
+    m20 = out_ref[ROW_M2, :]
+    n = n0 + n_b
+    safe_n = jnp.where(n > 0, n, 1.0)
+    delta = mean_b - mean0
+    mean = jnp.where(n > 0, (n0 * mean0 + n_b * mean_b) / safe_n, 0.0)
+    m2 = jnp.where(n > 0, m20 + m2_b + delta * delta * (n0 * n_b) / safe_n, 0.0)
+
+    out_ref[ROW_N, :] = n
+    out_ref[ROW_MEAN, :] = mean
+    out_ref[ROW_M2, :] = m2
+    out_ref[ROW_SUMX, :] = out_ref[ROW_SUMX, :] + sx_b
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "interpret"))
+def qo_update_pallas(table: jax.Array, scalars: jax.Array, x: jax.Array,
+                     y: jax.Array, w: jax.Array, *, tile: int = 1024,
+                     interpret: bool = False) -> jax.Array:
+    """table: (8, C) f32; scalars: (1, 2) [radius, origin]; x/y/w: (N,).
+
+    N must be a multiple of ``tile`` (ops.py pads with w=0).
+    """
+    cap = table.shape[1]
+    n = x.shape[0]
+    assert n % tile == 0, "pad inputs to a multiple of the tile size"
+    grid = (n // tile,)
+    xg = x.reshape(grid[0], tile)
+    yg = y.reshape(grid[0], tile)
+    wg = w.reshape(grid[0], tile)
+
+    return pl.pallas_call(
+        _qo_update_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 2), lambda i: (0, 0)),          # scalars
+            pl.BlockSpec((1, tile), lambda i: (i, 0)),        # x tile
+            pl.BlockSpec((1, tile), lambda i: (i, 0)),        # y tile
+            pl.BlockSpec((1, tile), lambda i: (i, 0)),        # w tile
+            pl.BlockSpec((TABLE_ROWS, cap), lambda i: (0, 0)),  # seed table
+        ],
+        out_specs=pl.BlockSpec((TABLE_ROWS, cap), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((TABLE_ROWS, cap), jnp.float32),
+        interpret=interpret,
+    )(scalars, xg, yg, wg, table)

@@ -1,0 +1,74 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Single source of truth: the oracles delegate to :mod:`repro.core.qo`
+(which the system tests validate against numpy), after converting between
+the kernels' dense (8, C) table layout and the core dict layout.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import qo as qo_lib
+from repro.kernels.qo_update import ROW_N, ROW_MEAN, ROW_M2, ROW_SUMX, TABLE_ROWS
+
+
+def pack_table(t: qo_lib.QOTable) -> tuple[jax.Array, jax.Array]:
+    """dict table -> ((8, C) dense table, (1, 2) [radius, origin])."""
+    cap = t["sum_x"].shape[0]
+    dense = jnp.zeros((TABLE_ROWS, cap), jnp.float32)
+    dense = dense.at[ROW_N].set(t["y"]["n"])
+    dense = dense.at[ROW_MEAN].set(t["y"]["mean"])
+    dense = dense.at[ROW_M2].set(t["y"]["m2"])
+    dense = dense.at[ROW_SUMX].set(t["sum_x"])
+    scal = jnp.stack([t["radius"], t["origin"]]).reshape(1, 2).astype(jnp.float32)
+    return dense, scal
+
+
+def unpack_table(dense: jax.Array, scal: jax.Array) -> qo_lib.QOTable:
+    return {
+        "radius": scal[0, 0],
+        "origin": scal[0, 1],
+        "sum_x": dense[ROW_SUMX],
+        "y": {"n": dense[ROW_N], "mean": dense[ROW_MEAN], "m2": dense[ROW_M2]},
+    }
+
+
+def qo_update_ref(dense, scal, x, y, w) -> jax.Array:
+    """Oracle for qo_update_pallas (same dense layout in/out)."""
+    t = unpack_table(dense, scal)
+    t = qo_lib.update(t, x, y, w)
+    return pack_table(t)[0]
+
+
+def qo_query_ref(dense) -> jax.Array:
+    """Oracle for qo_query_pallas: (8, C) -> (8, C) scores/thresholds."""
+    scal = jnp.array([[1.0, 0.0]], jnp.float32)  # radius/origin unused here
+    t = unpack_table(dense, scal)
+    ybins = t["y"]
+    occ = ybins["n"] > 0
+    cap = occ.shape[0]
+
+    from repro.core import stats
+    left = jax.lax.associative_scan(stats.merge, ybins)
+    tot = jax.tree.map(lambda v: v[-1], left)
+    right = stats.subtract(
+        jax.tree.map(lambda v: jnp.broadcast_to(v, (cap,)), tot), left)
+    n_tot = jnp.maximum(tot["n"], 1.0)
+    vr = stats.variance(tot) \
+        - (left["n"] / n_tot) * stats.variance(left) \
+        - (right["n"] / n_tot) * stats.variance(right)
+
+    proto = jnp.where(occ, t["sum_x"] / jnp.where(occ, ybins["n"], 1.0), 0.0)
+    idx = jnp.arange(cap)
+    last_occ = jax.lax.associative_scan(jnp.maximum, jnp.where(occ, idx, -1))
+    first_occ_from = jax.lax.associative_scan(
+        jnp.minimum, jnp.where(occ, idx, cap)[::-1])[::-1]
+    nxt = jnp.concatenate([first_occ_from[1:], jnp.full((1,), cap)])
+    ok = (last_occ >= 0) & (nxt < cap)
+    cand = 0.5 * (proto[jnp.maximum(last_occ, 0)] + proto[jnp.minimum(nxt, cap - 1)])
+
+    out = jnp.zeros((TABLE_ROWS, cap), jnp.float32)
+    out = out.at[0].set(jnp.where(ok, vr, -jnp.inf))
+    out = out.at[1].set(cand)
+    return out

@@ -1,0 +1,126 @@
+"""§Perf hillclimb runner: compile variant configurations of a dry-run
+cell and report the roofline-term deltas.
+
+    PYTHONPATH=src python -m repro.launch.perf --cell grok-1-314b:train_4k \
+        --variant seq_parallel
+
+Each variant is a named set of build overrides; results append to
+perf_results.json with (cell, variant, three terms, deltas vs baseline).
+"""
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+
+import jax  # noqa: E402
+
+from repro.configs import get_arch, get_shape  # noqa: E402
+from repro.launch import hlocost  # noqa: E402
+from repro.launch.dryrun import (PEAK_FLOPS, HBM_BW, ICI_BW,  # noqa: E402
+                                 model_flops)
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.train import steps as ST  # noqa: E402
+
+VARIANTS = {
+    "baseline": {},
+    "seq_parallel": {"seq_parallel": True},
+    "microbatch8": {"microbatch": 8},
+    "microbatch16": {"microbatch": 16},
+    "no_remat": {"remat": False},
+    "no_remat_mb8": {"remat": False, "microbatch": 8},
+    "seqpar_mb8": {"seq_parallel": True, "microbatch": 8},
+    "seqpar_mb16": {"seq_parallel": True, "microbatch": 16},
+    "kv2048": {"kv_chunk": 2048},
+    "kv128": {"kv_chunk": 128},
+    "seqpar_norematmb8": {"seq_parallel": True, "remat": False,
+                          "microbatch": 8},
+    "moe_bf16_combine": {"moe_bf16": True},
+    "moe_bf16_mb16": {"moe_bf16": True, "microbatch": 16},
+    "mamba2_ssd": {"ssd": True},
+    "mamba2_ssd_mb8": {"ssd": True, "microbatch": 8},
+    "weight_gather": {"sharding_style": "gather"},
+    "wg_seqpar": {"sharding_style": "gather", "seq_parallel": True},
+    "wg_mb16": {"sharding_style": "gather", "microbatch": 16},
+    "wg_seqpar_mb8": {"sharding_style": "gather", "seq_parallel": True,
+                      "microbatch": 8},
+    "wg_ssd": {"sharding_style": "gather", "ssd": True},
+    "wg_ssd_mb8": {"sharding_style": "gather", "ssd": True, "microbatch": 8},
+    "lean": {"lean": True},
+    "lean_mb16": {"lean": True, "microbatch": 16},
+    "wg_seqpar_lean": {"sharding_style": "gather", "seq_parallel": True,
+                       "lean": True},
+    "ssd_mb8_lean": {"ssd": True, "microbatch": 8, "lean": True},
+}
+
+
+def run_variant(arch, shape_name, variant, extra=None, multi_pod=False):
+    cfg = get_arch(arch)
+    shape = get_shape(shape_name)
+    over = dict(VARIANTS[variant])
+    over.update(extra or {})
+    # module-level implementation switches (not build args)
+    import jax.numpy as jnp
+    from repro.models import layers as L
+    from repro.models import ssm as S
+    L.set_moe_combine_dtype(
+        jnp.bfloat16 if over.pop("moe_bf16", False) else jnp.float32)
+    L.set_lean_internals(over.pop("lean", False))
+    S.set_mamba2_impl("ssd" if over.pop("ssd", False) else "scan")
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    fn, _, _, shapes = ST.build_train_step(
+        cfg, shape, mesh, donate=False, **over)
+    with mesh:
+        compiled = fn.lower(*shapes).compile()
+    walked = hlocost.analyze(compiled.as_text())
+    mem = compiled.memory_analysis()
+    chips = mesh.devices.size
+    mf = model_flops(cfg, shape)
+    t_c = walked["flops"] / PEAK_FLOPS
+    t_m = walked["bytes"] / HBM_BW
+    t_x = walked["collective_bytes"] / ICI_BW
+    return {
+        "arch": arch, "shape": shape_name, "variant": variant,
+        "overrides": over,
+        "compile_s": round(time.time() - t0, 1),
+        "t_compute_s": t_c, "t_memory_s": t_m, "t_collective_s": t_x,
+        "dominant": max([("compute", t_c), ("memory", t_m),
+                         ("collective", t_x)], key=lambda kv: kv[1])[0],
+        "collectives": walked["collectives"],
+        "useful_flops_ratio": (mf / chips) / walked["flops"],
+        "roofline_fraction": (mf / chips / PEAK_FLOPS) / max(t_c, t_m, t_x),
+        "temp_bytes": getattr(mem, "temp_size_in_bytes", 0),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", required=True, help="arch:shape")
+    ap.add_argument("--variant", required=True,
+                    help=f"one of {sorted(VARIANTS)} (comma separated ok)")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--out", default="/root/repo/perf_results.json")
+    args = ap.parse_args()
+    arch, shape = args.cell.split(":")
+
+    results = []
+    if os.path.exists(args.out):
+        results = json.load(open(args.out))
+    for variant in args.variant.split(","):
+        print(f"=== {arch}:{shape} [{variant}] ===", flush=True)
+        r = run_variant(arch, shape, variant, multi_pod=args.multi_pod)
+        if args.multi_pod:
+            r["variant"] = variant + "@2x16x16"
+        print(json.dumps({k: v for k, v in r.items()
+                          if k not in ("collectives",)}), flush=True)
+        results.append(r)
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,78 @@
+"""CLI training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train \
+        --arch qwen3-8b --reduced --steps 200 --batch 8 --seq 256
+
+On a real TPU deployment: drop --reduced, point --mesh at production
+(16x16 / 2x16x16) and the same code paths run; the container runs reduced
+configs on a local CPU mesh.  Auto-resumes from --ckpt-dir if a checkpoint
+exists; SIGTERM triggers a final save (preemption-safe).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.configs import ShapeConfig, reduced
+from repro.data.tokens import TokenStream
+from repro.launch.mesh import make_local_mesh, make_production_mesh
+from repro.models import layers as L
+from repro.optim import adamw
+from repro.train.loop import LoopConfig, Trainer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-8b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--d-model", type=int, default=256)
+    ap.add_argument("--layers", type=int, default=4)
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--microbatch", type=int, default=0)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--mesh", default="local", choices=["local", "pod", "multipod"])
+    ap.add_argument("--data-par", type=int, default=1)
+    ap.add_argument("--model-par", type=int, default=1)
+    ap.add_argument("--f32", action="store_true", default=True)
+    args = ap.parse_args()
+
+    cfg = configs.get_arch(args.arch)
+    if args.reduced:
+        cfg = reduced(cfg, d_model=args.d_model, n_layers=args.layers,
+                      n_heads=max(4, args.d_model // 32),
+                      n_kv_heads=max(4, args.d_model // 32) if cfg.n_kv_heads else 0,
+                      d_ff=args.d_model * 4, head_dim=32)
+    if args.f32 and jax.default_backend() != "tpu":
+        L.set_compute_dtype(jnp.float32)
+
+    if args.mesh == "local":
+        mesh = make_local_mesh(args.data_par, args.model_par)
+    else:
+        mesh = make_production_mesh(multi_pod=(args.mesh == "multipod"))
+
+    shape = ShapeConfig("cli_train", args.seq, args.batch, "train")
+    data = TokenStream(vocab=cfg.vocab, seq_len=args.seq,
+                       global_batch=args.batch)
+    lc = LoopConfig(total_steps=args.steps, ckpt_every=args.ckpt_every,
+                    ckpt_dir=args.ckpt_dir, microbatch=args.microbatch)
+    opt = adamw.AdamWConfig(lr=args.lr, total_steps=args.steps,
+                            warmup_steps=max(10, args.steps // 20))
+    trainer = Trainer(cfg, shape, mesh, data, lc, opt)
+    _, _, mon, history = trainer.run(
+        log_fn=lambda rec: print(json.dumps(rec), flush=True))
+    from repro.train import monitor as MON
+    print(json.dumps({"monitor": {
+        k: {kk: float(vv) for kk, vv in s.items()}
+        for k, s in MON.summaries(mon).items()}}, indent=1))
+
+
+if __name__ == "__main__":
+    main()

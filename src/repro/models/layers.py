@@ -1,0 +1,370 @@
+"""Transformer building blocks, written pjit-first.
+
+Everything here is a pure function over param pytrees.  Design points that
+matter at 512+ chips (DESIGN.md §6):
+
+* attention is **chunked** over the KV axis with an online-softmax scan, so
+  the S x S logits tensor is never materialized (required for the 32k
+  prefill and 500k decode shapes to fit HBM);
+* GQA is computed in grouped layout (B, S, Hkv, G, hd) so the partitioner
+  shards the *kv-head* axis and query groups follow for free;
+* MoE uses grouped capacity dispatch (GShard-style, first-come keep) with
+  gather/scatter instead of (T, E, C) one-hot tensors, so the dispatch
+  memory is O(tokens * top_k * capacity_factor * d) and expert weights can
+  shard either over the expert axis (EP, when E divides the model axis) or
+  over d_ff (TP fallback, e.g. grok's 8 experts on a 16-way axis);
+* all matmuls run in bf16 with f32 accumulation (`preferred_element_type`).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+_COMPUTE_DTYPE = [jnp.bfloat16]
+
+
+def set_compute_dtype(dtype):
+    """bf16 for TPU lowering/dry-run; f32 for CPU smoke tests (the CPU
+    backend cannot execute bf16 dots)."""
+    _COMPUTE_DTYPE[0] = dtype
+
+
+def compute_dtype():
+    return _COMPUTE_DTYPE[0]
+
+
+def cast(x):
+    return x.astype(_COMPUTE_DTYPE[0])
+
+
+def constrain(x, spec):
+    """Pin a PartitionSpec on an activation (no-op when spec is None).
+
+    Applied to the residual stream at every layer boundary: GSPMD
+    propagates input shardings poorly through while-loop carries (a scan
+    over layers can silently replicate the batch axis 16x), so the carry
+    is re-pinned each iteration."""
+    if spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+# --------------------------------------------------------------------------
+# norms / rope
+# --------------------------------------------------------------------------
+
+# lean mode: avoid materializing f32 copies of residual-sized tensors in
+# norms and attention probabilities (the variance reduction stays f32 —
+# it is fusion-internal).  §Perf hillclimb; off by default (baseline).
+_LEAN_INTERNALS = [False]
+
+
+def set_lean_internals(on: bool):
+    _LEAN_INTERNALS[0] = bool(on)
+
+
+def rms_norm(x, scale, eps=1e-5):
+    if _LEAN_INTERNALS[0]:
+        var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1,
+                       keepdims=True)
+        inv = jax.lax.rsqrt(var + eps).astype(x.dtype)
+        return x * inv * scale.astype(x.dtype)
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps) * scale).astype(x.dtype)
+
+
+def rope(x, positions, theta=1e4):
+    """x: (B, S, *head_axes, hd); positions: (S,) or (B, S)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freq  # (..., S, half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    n_head_axes = x.ndim - 3  # axes between S and hd (e.g. Hkv, G)
+    for _ in range(n_head_axes):
+        cos = cos[..., None, :]
+        sin = sin[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# attention
+# --------------------------------------------------------------------------
+
+def repeat_kv(k, n_rep):
+    """(B, S, Hkv, hd) -> (B, S, Hkv*n_rep, hd).  A broadcast-gather; done
+    per KV chunk so the expanded tensor never exceeds one chunk."""
+    if n_rep == 1:
+        return k
+    return jnp.repeat(k, n_rep, axis=2)
+
+
+def _online_softmax_scan(q, k, v, q_pos, kv_pos, *, causal, window, kv_chunk,
+                         n_rep=1):
+    """Chunked attention: scan over KV chunks with running (m, l, acc).
+
+    q: (B, S, H, hd)   k, v: (B, Skv, Hkv, hd) with H = Hkv * n_rep
+    q_pos: (S,), kv_pos: (Skv,) absolute positions for masking.
+    Returns (B, S, H, hd).
+    """
+    B, S, H, hd = q.shape
+    Skv = k.shape[1]
+    kv_chunk = min(kv_chunk, Skv)
+    while Skv % kv_chunk:  # largest divisor of Skv <= requested chunk
+        kv_chunk -= 1
+    n_chunks = Skv // kv_chunk
+    scale = 1.0 / (hd ** 0.5)
+
+    kc = k.reshape(B, n_chunks, kv_chunk, -1, hd)
+    vc = v.reshape(B, n_chunks, kv_chunk, -1, hd)
+    pc = kv_pos.reshape(n_chunks, kv_chunk)
+
+    def step(carry, xs):
+        m, l, acc = carry
+        kj, vj, pj = xs  # (B, kv_chunk, Hkv, hd), (kv_chunk,)
+        kj = repeat_kv(kj, n_rep)
+        vj = repeat_kv(vj, n_rep)
+        logits = jnp.einsum("bshd,bchd->bshc", q, kj,
+                            preferred_element_type=jnp.float32) * scale
+        mask = jnp.ones((S, kv_chunk), jnp.bool_)
+        if causal:
+            mask &= q_pos[:, None] >= pj[None, :]
+        if window > 0:
+            mask &= q_pos[:, None] - pj[None, :] < window
+        logits = jnp.where(mask[None, :, None, :], logits, -jnp.inf)
+        m_new = jnp.maximum(m, logits.max(axis=-1))
+        # guard fully-masked rows
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.exp(logits - m_safe[..., None])
+        p = jnp.where(jnp.isfinite(logits), p, 0.0)
+        corr = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+        if _LEAN_INTERNALS[0]:
+            # materialize the probability tensor once, in bf16 — the l sum
+            # and the pv matmul both read the narrow copy
+            p = p.astype(vj.dtype)
+        l_new = l * corr + p.astype(jnp.float32).sum(axis=-1)
+        pv = jnp.einsum("bshc,bchd->bshd", p.astype(vj.dtype), vj,
+                        preferred_element_type=jnp.float32)
+        acc_new = acc * corr[..., None] + pv
+        return (m_safe, l_new, acc_new), None
+
+    m0 = jnp.full((B, S, H), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, S, H), jnp.float32)
+    acc0 = jnp.zeros((B, S, H, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        step, (m0, l0, acc0),
+        (jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0), pc))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.astype(q.dtype)
+
+
+def attention(params, x, *, cfg, positions, kv_cache=None, cache_pos=None,
+              cross_kv=None, causal=True, kv_chunk=512):
+    """Multi-head attention with GQA, optional SWA window, qk-norm, RoPE.
+
+    Flat-head layout: every assigned arch has n_heads % 16 == 0, so the
+    query-head axis shards exactly over the 16-way model axis; KV heads
+    shard when divisible and replicate otherwise (Megatron GQA convention).
+
+    params: {wq (d, H, hd), wk (d, Hkv, hd), wv, wo (H, hd, d),
+             [q_norm, k_norm (hd,)]}
+    modes:
+      * train/prefill: kv_cache None -> self attention over x
+      * decode: kv_cache = dict(k, v) (B, Smax, Hkv, hd), cache_pos scalar
+      * cross:  cross_kv = (k, v) precomputed encoder keys/values
+    Returns (out, new_cache).
+    """
+    B, S, d = x.shape
+    H, hd = params["wq"].shape[1:]
+    Hkv = params["wk"].shape[1]
+    n_rep = H // Hkv
+    xq = jnp.einsum("bsd,dnh->bsnh", cast(x), cast(params["wq"]),
+                    preferred_element_type=jnp.float32).astype(compute_dtype())
+    if cross_kv is None:
+        xk = jnp.einsum("bsd,dkh->bskh", cast(x), cast(params["wk"]),
+                        preferred_element_type=jnp.float32).astype(compute_dtype())
+        xv = jnp.einsum("bsd,dkh->bskh", cast(x), cast(params["wv"]),
+                        preferred_element_type=jnp.float32).astype(compute_dtype())
+    else:
+        xk, xv = cross_kv
+
+    if cfg.qk_norm:
+        xq = rms_norm(xq, params["q_norm"], cfg.norm_eps)
+        if cross_kv is None:
+            xk = rms_norm(xk, params["k_norm"], cfg.norm_eps)
+
+    if cross_kv is None:
+        xq = rope(xq, positions, cfg.rope_theta)
+        xk = rope(xk, positions, cfg.rope_theta)
+
+    new_cache = None
+    if kv_cache is not None:
+        # decode (S == 1): append this step's k/v at cache_pos and attend
+        # against the whole cache (chunked, so the repeated-KV tensor and
+        # the logits stay O(kv_chunk))
+        k_all = jax.lax.dynamic_update_slice_in_dim(kv_cache["k"], xk, cache_pos, 1)
+        v_all = jax.lax.dynamic_update_slice_in_dim(kv_cache["v"], xv, cache_pos, 1)
+        new_cache = {"k": k_all, "v": v_all}
+        Smax = k_all.shape[1]
+        q_pos = jnp.broadcast_to(cache_pos, (1,))
+        kv_pos = jnp.arange(Smax)
+        out = _online_softmax_scan(
+            xq, k_all, v_all, q_pos, kv_pos,
+            causal=True, window=cfg.swa_window, kv_chunk=kv_chunk,
+            n_rep=n_rep)
+    elif cross_kv is not None:
+        out = _online_softmax_scan(
+            xq, xk, xv, positions, jnp.arange(xk.shape[1]),
+            causal=False, window=0, kv_chunk=kv_chunk, n_rep=n_rep)
+    else:
+        out = _online_softmax_scan(
+            xq, xk, xv, positions, positions,
+            causal=causal, window=cfg.swa_window, kv_chunk=kv_chunk,
+            n_rep=n_rep)
+        # expose post-rope k/v so prefill can write them into a decode cache
+        new_cache = {"k": xk, "v": xv}
+
+    proj = jnp.einsum("bsnh,nhd->bsd", cast(out), cast(params["wo"]),
+                      preferred_element_type=jnp.float32).astype(x.dtype)
+    return proj, new_cache
+
+
+def attention_params(key, cfg, d=None):
+    d = d or cfg.d_model
+    H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    s = d ** -0.5
+    p = {
+        "wq": jax.random.normal(k1, (d, H, hd), jnp.float32) * s,
+        "wk": jax.random.normal(k2, (d, Hkv, hd), jnp.float32) * s,
+        "wv": jax.random.normal(k3, (d, Hkv, hd), jnp.float32) * s,
+        "wo": jax.random.normal(k4, (H, hd, d), jnp.float32) * (H * hd) ** -0.5,
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), jnp.float32)
+        p["k_norm"] = jnp.ones((hd,), jnp.float32)
+    return p
+
+
+# --------------------------------------------------------------------------
+# dense MLP
+# --------------------------------------------------------------------------
+
+def swiglu(params, x):
+    h = jnp.einsum("bsd,df->bsf", cast(x), cast(params["w_gate"]),
+                   preferred_element_type=jnp.float32)
+    u = jnp.einsum("bsd,df->bsf", cast(x), cast(params["w_up"]),
+                   preferred_element_type=jnp.float32)
+    h = jax.nn.silu(h) * u
+    return jnp.einsum("bsf,fd->bsd", h.astype(compute_dtype()), cast(params["w_down"]),
+                      preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def swiglu_params(key, cfg, d=None, f=None):
+    d = d or cfg.d_model
+    f = f or cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": jax.random.normal(k1, (d, f), jnp.float32) * d ** -0.5,
+        "w_up": jax.random.normal(k2, (d, f), jnp.float32) * d ** -0.5,
+        "w_down": jax.random.normal(k3, (f, d), jnp.float32) * f ** -0.5,
+    }
+
+
+# --------------------------------------------------------------------------
+# mixture of experts — grouped capacity dispatch
+# --------------------------------------------------------------------------
+
+# dtype of the MoE combine buffer.  The combine's scatter-add output is the
+# all-reduce payload under pjit (one (tokens, d) tensor per layer per pass);
+# bf16 halves that wire traffic (§Perf hillclimb).  f32 default.
+_MOE_COMBINE_DTYPE = [jnp.float32]
+
+
+def set_moe_combine_dtype(dtype):
+    _MOE_COMBINE_DTYPE[0] = dtype
+
+def moe(params, x, cfg, group_size: int = 4096):
+    """Top-k MoE with GShard-style first-come capacity and gather dispatch.
+
+    x: (B, S, d).  Tokens are flattened and regrouped into groups of
+    ``group_size`` so the per-expert capacity is group-local (keeps the
+    top_k selection and gathers local to a data shard under pjit).
+    Returns (out, aux_loss).
+    """
+    B, S, d = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    T = B * S
+    Sg = min(group_size, T)
+    Gn = T // Sg
+    assert T % Sg == 0, (T, Sg)
+    xt = x.reshape(Gn, Sg, d)
+
+    logits = jnp.einsum("gsd,de->gse", cast(xt), cast(params["router"]),
+                        preferred_element_type=jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_vals, top_idx = jax.lax.top_k(probs, k)            # (G, Sg, k)
+    top_vals = top_vals / jnp.maximum(top_vals.sum(-1, keepdims=True), 1e-9)
+
+    # gate (G, Sg, E): normalized prob where selected, else 0
+    gate = jnp.zeros((Gn, Sg, E), jnp.float32)
+    for i in range(k):
+        gate = gate + jax.nn.one_hot(top_idx[..., i], E) * top_vals[..., i:i + 1]
+    assigned = gate > 0
+
+    # aux load-balance loss (Switch-style)
+    me = assigned.mean(axis=(0, 1))
+    pe = probs.mean(axis=(0, 1))
+    aux = E * jnp.sum(me * pe)
+
+    cap = max(1, int(Sg * k / E * cfg.moe_capacity_factor))
+    cap = min(cap, Sg)
+    # first-come keep: rank tokens by arrival within each expert
+    pos = jnp.cumsum(assigned.astype(jnp.int32), axis=1) - 1   # (G, Sg, E)
+    score = jnp.where(assigned, -pos.astype(jnp.float32), -jnp.inf)
+    # top `cap` earliest tokens per (group, expert)
+    sel_score, sel_idx = jax.lax.top_k(jnp.swapaxes(score, 1, 2), cap)  # (G, E, cap)
+    sel_valid = jnp.isfinite(sel_score)
+
+    # dispatch: gather tokens   xe: (G, E, cap, d)
+    xe = jnp.take_along_axis(xt[:, None], sel_idx[..., None], axis=2)
+    xe = jnp.where(sel_valid[..., None], xe, 0.0)
+
+    # in lean mode the up-projection outputs accumulate in bf16: they are
+    # the all-reduce payloads when the contraction dim is FSDP-sharded
+    # (grok: 5.1 TB/step of f32 otherwise — §Perf)
+    acc_dt = compute_dtype() if _LEAN_INTERNALS[0] else jnp.float32
+    h = jnp.einsum("gecd,edf->gecf", cast(xe), cast(params["w_gate"]),
+                   preferred_element_type=acc_dt)
+    u = jnp.einsum("gecd,edf->gecf", cast(xe), cast(params["w_up"]),
+                   preferred_element_type=acc_dt)
+    h = jax.nn.silu(h.astype(jnp.float32)) * u.astype(jnp.float32)
+    ye = jnp.einsum("gecf,efd->gecd", h.astype(compute_dtype()), cast(params["w_down"]),
+                    preferred_element_type=jnp.float32)     # (G, E, cap, d)
+
+    # combine: weight by gate prob of the token for THIS expert and scatter
+    w_tok = jnp.take_along_axis(jnp.swapaxes(gate, 1, 2), sel_idx, axis=2)
+    ye = ye * jnp.where(sel_valid, w_tok, 0.0)[..., None]
+    cdt = _MOE_COMBINE_DTYPE[0]
+    out = jnp.zeros((Gn, Sg, d), cdt)
+    out = jax.vmap(
+        lambda o, idx, y: o.at[idx.reshape(-1)].add(y.reshape(-1, d)))(
+        out, sel_idx, ye.astype(cdt))
+    return out.reshape(B, S, d).astype(x.dtype), aux
+
+
+def moe_params(key, cfg):
+    E, d, f = cfg.n_experts, cfg.d_model, cfg.d_ff
+    k0, k1, k2, k3 = jax.random.split(key, 4)
+    return {
+        "router": jax.random.normal(k0, (d, E), jnp.float32) * d ** -0.5,
+        "w_gate": jax.random.normal(k1, (E, d, f), jnp.float32) * d ** -0.5,
+        "w_up": jax.random.normal(k2, (E, d, f), jnp.float32) * d ** -0.5,
+        "w_down": jax.random.normal(k3, (E, f, d), jnp.float32) * f ** -0.5,
+    }

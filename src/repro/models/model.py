@@ -1,0 +1,124 @@
+"""Public model API: init / loss / prefill / decode for every family.
+
+``lm_loss`` computes chunked cross-entropy (the (B, S, V) logits tensor is
+never fully materialized; V is model-sharded, S is chunked) — required to
+fit 150k+ vocabularies at 1M-token global batches.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as T
+from repro.models.layers import compute_dtype, cast
+
+init_params = T.init_params
+init_cache = T.init_cache
+
+
+def _embed(params, cfg, batch):
+    """Token ids -> (B, S, d); modality-stub archs feed embeddings directly."""
+    if cfg.frontend_stub and "embeds" in batch:
+        return batch["embeds"].astype(compute_dtype())
+    return params["embed"][batch["tokens"]].astype(compute_dtype())
+
+
+def _lm_head(params, cfg):
+    if cfg.tie_embeddings:
+        return params["embed"].T
+    return params["lm_head"]
+
+
+def _xent_chunk(hidden, head, labels, mask):
+    """hidden (B, C, d), head (d, V), labels (B, C) -> (sum_loss, sum_mask)."""
+    logits = jnp.einsum("bcd,dv->bcv", cast(hidden), cast(head),
+                        preferred_element_type=jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    tgt = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = (lse - tgt) * mask
+    return nll.sum(), mask.sum()
+
+
+def lm_loss(params, cfg, batch, *, remat=True, kv_chunk=512,
+            loss_chunk=512, aux_weight=0.01, act_spec=None):
+    """batch: tokens (B,S) int32, labels (B,S) int32, [loss_mask (B,S)],
+    [embeds (B,S,d) for frontend stubs], [enc_in (B,Senc,d) for encdec]."""
+    x = _embed(params, cfg, batch)
+    B, Seq = x.shape[:2]
+    positions = jnp.arange(Seq)
+
+    enc_out = None
+    if cfg.family == "encdec":
+        enc_out = T.encode(params, cfg, batch["enc_in"].astype(compute_dtype()),
+                           remat=remat, kv_chunk=kv_chunk, act_spec=act_spec)
+
+    hidden, _, aux = T.forward(params, cfg, x, positions, enc_out=enc_out,
+                               remat=remat, kv_chunk=kv_chunk,
+                               act_spec=act_spec)
+    hidden = T.rms_norm(hidden, params["final_norm"], cfg.norm_eps)
+
+    head = _lm_head(params, cfg)
+    labels = batch["labels"]
+    mask = batch.get("loss_mask", jnp.ones(labels.shape, jnp.float32))
+
+    C = min(loss_chunk, Seq)
+    nc = Seq // C
+    assert Seq % C == 0
+
+    def step(carry, xs):
+        h_c, l_c, m_c = xs
+        s, n = _xent_chunk(h_c, head, l_c, m_c)
+        return (carry[0] + s, carry[1] + n), None
+
+    resh = lambda t: jnp.moveaxis(
+        t.reshape((B, nc, C) + t.shape[2:]), 1, 0)
+    (tot, cnt), _ = jax.lax.scan(
+        step, (jnp.float32(0.0), jnp.float32(0.0)),
+        (resh(hidden), resh(labels), resh(mask)))
+    loss = tot / jnp.maximum(cnt, 1.0)
+    return loss + aux_weight * aux, {"xent": loss, "aux": aux}
+
+
+def prefill(params, cfg, batch, cache, *, kv_chunk=512, act_spec=None):
+    """Fill the decode cache from a prompt; returns (cache, last_logits).
+
+    For attention families the cache k/v are produced by running the stack
+    with a cache whose max_seq >= prompt length and cache_pos=0 writes...
+    here we instead run the train-style forward and write k/v in one shot.
+    """
+    x = _embed(params, cfg, batch)
+    B, Seq = x.shape[:2]
+    positions = jnp.arange(Seq)
+
+    enc_out = None
+    if cfg.family == "encdec":
+        enc_out = T.encode(params, cfg, batch["enc_in"].astype(compute_dtype()),
+                           kv_chunk=kv_chunk, act_spec=act_spec)
+
+    hidden, new_caches, _ = T.forward(
+        params, cfg, x, positions, caches=cache, cache_pos=jnp.int32(0),
+        enc_out=enc_out, kv_chunk=kv_chunk, act_spec=act_spec)
+    hidden = T.rms_norm(hidden[:, -1:], params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bcd,dv->bcv", cast(hidden), cast(_lm_head(params, cfg)),
+                        preferred_element_type=jnp.float32)
+    return new_caches, logits[:, 0]
+
+
+def decode_step(params, cfg, token, cache, pos, *, kv_chunk=512, act_spec=None):
+    """One decode step: token (B,) int32 (or (B,d) embeds for stubs),
+    pos scalar int32.  Returns (logits (B,V), new_cache)."""
+    if cfg.frontend_stub and token.ndim == 2:
+        x = token[:, None].astype(compute_dtype())
+    else:
+        x = params["embed"][token][:, None].astype(compute_dtype())
+    positions = pos + jnp.arange(1)
+    hidden, new_cache, _ = T.forward(params, cfg, x, positions, caches=cache,
+                                     cache_pos=pos, kv_chunk=kv_chunk,
+                                     act_spec=act_spec)
+    hidden = T.rms_norm(hidden, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bcd,dv->bcv", cast(hidden), cast(_lm_head(params, cfg)),
+                        preferred_element_type=jnp.float32)
+    return logits[:, 0], new_cache

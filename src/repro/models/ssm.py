@@ -1,0 +1,291 @@
+"""State-space mixers: Mamba-1 (falcon-mamba) and Mamba-2 (zamba2).
+
+Both are written as chunked scans: the sequence is cut into chunks; inside
+a chunk the linear recurrence h_t = a_t * h_{t-1} + b_t is solved with an
+associative scan, the chunk's outputs y = <h, C> are emitted immediately,
+and only the carried state (B, ..., N) crosses chunk boundaries.  Peak
+memory is therefore O(B * chunk * d_inner * N) rather than
+O(B * S * d_inner * N) — what makes the 32k prefill and 500k decode shapes
+feasible (DESIGN.md §5).
+
+Decode is the exact recurrence: one step, O(1) per token — the reason the
+SSM/hybrid archs are the ones that run ``long_500k``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import compute_dtype, cast
+
+CONV_K = 4  # depthwise conv kernel width (mamba standard)
+
+# mamba2 chunk solver: "scan" = associative scan over the (B,cs,nh,hd,N)
+# discretized inputs (baseline); "ssd" = chunked quadratic form (the real
+# mamba-2 SSD algorithm): intra-chunk outputs via (cs x cs) attention-like
+# matmuls, no (B,cs,nh,hd,N) tensor ever materialized.  §Perf hillclimb.
+_MAMBA2_IMPL = ["scan"]
+
+
+def set_mamba2_impl(name: str):
+    assert name in ("scan", "ssd"), name
+    _MAMBA2_IMPL[0] = name
+
+
+def mamba2_impl() -> str:
+    return _MAMBA2_IMPL[0]
+
+
+def _affine_compose(c1, c2):
+    a1, b1 = c1
+    a2, b2 = c2
+    return a1 * a2, b2 + a2 * b1
+
+
+def _chunk_scan(step_chunk, xs_chunks, state0):
+    """lax.scan over chunks.  ``step_chunk(state, chunk_in) -> (state, y)``."""
+    return jax.lax.scan(step_chunk, state0, xs_chunks)
+
+
+def _solve_chunk(a, b, state):
+    """Associative within-chunk solve.  a, b: (B, cs, ...); state (B, ...).
+    Returns (h: (B, cs, ...), new_state)."""
+    a_sw = jnp.moveaxis(a, 1, 0)
+    b_sw = jnp.moveaxis(b, 1, 0)
+    cum_a, cum_b = jax.lax.associative_scan(_affine_compose, (a_sw, b_sw))
+    h = cum_a * state[None] + cum_b
+    return jnp.moveaxis(h, 0, 1), h[-1]
+
+
+# --------------------------------------------------------------------------
+# depthwise causal conv (kernel CONV_K) as shifted adds
+# --------------------------------------------------------------------------
+
+def causal_conv(x, w, conv_state=None):
+    """x: (B, S, c), w: (CONV_K, c). conv_state: (B, CONV_K-1, c) for decode
+    continuity.  Returns (y, new_conv_state)."""
+    B, S, c = x.shape
+    if conv_state is None:
+        conv_state = jnp.zeros((B, CONV_K - 1, c), x.dtype)
+    xp = jnp.concatenate([conv_state, x], axis=1)           # (B, S+K-1, c)
+    y = jnp.zeros((B, S, c), jnp.float32)
+    for i in range(CONV_K):
+        y = y + xp[:, i:i + S].astype(jnp.float32) * w[i]
+    new_state = xp[:, -(CONV_K - 1):]
+    return jax.nn.silu(y).astype(x.dtype), new_state
+
+
+# --------------------------------------------------------------------------
+# Mamba-1 (falcon-mamba)
+# --------------------------------------------------------------------------
+
+def mamba1_params(key, cfg):
+    d, di, N = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    dt_rank = max(1, d // 16)
+    ks = jax.random.split(key, 5)
+    return {
+        "in_proj": jax.random.normal(ks[0], (d, 2 * di), jnp.float32) * d ** -0.5,
+        "conv_w": jax.random.normal(ks[1], (CONV_K, di), jnp.float32) * 0.5,
+        "x_proj": jax.random.normal(ks[2], (di, dt_rank + 2 * N), jnp.float32) * di ** -0.5,
+        "dt_proj": jax.random.normal(ks[3], (dt_rank, di), jnp.float32) * dt_rank ** -0.5,
+        "dt_bias": jnp.zeros((di,), jnp.float32),
+        "A_log": jnp.log(jnp.tile(jnp.arange(1, N + 1, dtype=jnp.float32), (di, 1))),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": jax.random.normal(ks[4], (di, d), jnp.float32) * di ** -0.5,
+    }
+
+
+def _mamba1_abc(p, x_conv):
+    """x_conv (B, cs, di) -> a, b (B,cs,di,N) and C (B,cs,N)."""
+    N = (p["x_proj"].shape[1] - p["dt_proj"].shape[0]) // 2
+    dt_rank = p["dt_proj"].shape[0]
+    proj = jnp.einsum("bsd,de->bse", cast(x_conv), cast(p["x_proj"]),
+                      preferred_element_type=jnp.float32)
+    dt_r, Bm, Cm = jnp.split(proj, [dt_rank, dt_rank + N], axis=-1)
+    dt = jax.nn.softplus(
+        jnp.einsum("bsr,rd->bsd", dt_r, p["dt_proj"],
+                   preferred_element_type=jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])                                  # (di, N)
+    a = jnp.exp(dt[..., None] * A[None, None])                # (B,cs,di,N)
+    b = (dt * x_conv.astype(jnp.float32))[..., None] * Bm[:, :, None, :]
+    return a, b, Cm
+
+
+def mamba1(p, x, cfg, cache=None, chunk=128):
+    """x: (B, S, d) -> (B, S, d).  cache: {"ssm","conv"} for decode."""
+    B, S, d = x.shape
+    di, N = cfg.d_inner, cfg.ssm_state
+    xi = jnp.einsum("bsd,de->bse", cast(x), cast(p["in_proj"]),
+                    preferred_element_type=jnp.float32).astype(compute_dtype())
+    x_in, z = jnp.split(xi, 2, axis=-1)
+    conv_state = cache["conv"] if cache is not None else None
+    x_conv, new_conv = causal_conv(x_in, p["conv_w"], conv_state)
+
+    state0 = cache["ssm"] if cache is not None else jnp.zeros((B, di, N), jnp.float32)
+
+    if S == 1:  # decode fast path: exact single-step recurrence
+        a, b, Cm = _mamba1_abc(p, x_conv)
+        h = a[:, 0] * state0 + b[:, 0]                        # (B, di, N)
+        y = jnp.einsum("bdn,bn->bd", h, Cm[:, 0],
+                       preferred_element_type=jnp.float32)[:, None]
+        new_state = h
+    else:
+        cs = min(chunk, S)
+        while S % cs:  # largest divisor of S <= requested chunk
+            cs -= 1
+        nc = S // cs
+        xc = jnp.moveaxis(x_conv.reshape(B, nc, cs, di), 1, 0)
+
+        def step(state, x_chunk):
+            a, b, Cm = _mamba1_abc(p, x_chunk)
+            h, new_state = _solve_chunk(a, b, state)          # (B,cs,di,N)
+            y = jnp.einsum("bsdn,bsn->bsd", h, Cm,
+                           preferred_element_type=jnp.float32)
+            return new_state, y
+
+        new_state, ys = _chunk_scan(step, xc, state0)
+        y = jnp.moveaxis(ys, 0, 1).reshape(B, S, di)
+
+    y = y + p["D"] * x_conv.astype(jnp.float32)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    out = jnp.einsum("bse,ed->bsd", y.astype(compute_dtype()), cast(p["out_proj"]),
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+    return out, {"ssm": new_state, "conv": new_conv}
+
+
+# --------------------------------------------------------------------------
+# Mamba-2 (zamba2) — scalar decay per head, state (B, nh, hd, N)
+# --------------------------------------------------------------------------
+
+def mamba2_params(key, cfg):
+    """Separate projections per component (z / x / B / C / dt) so each can
+    carry its own PartitionSpec — the fused (d, 2di+2N+nh) projection has
+    shard-misaligned split points on a 16-way model axis (DESIGN.md §6)."""
+    d, di, N = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    nh = di // cfg.ssm_head_dim
+    ks = jax.random.split(key, 7)
+    s = d ** -0.5
+    return {
+        "in_z": jax.random.normal(ks[0], (d, di), jnp.float32) * s,
+        "in_x": jax.random.normal(ks[1], (d, di), jnp.float32) * s,
+        "in_B": jax.random.normal(ks[2], (d, N), jnp.float32) * s,
+        "in_C": jax.random.normal(ks[3], (d, N), jnp.float32) * s,
+        "in_dt": jax.random.normal(ks[4], (d, nh), jnp.float32) * s,
+        "conv_x": jax.random.normal(ks[5], (CONV_K, di), jnp.float32) * 0.5,
+        "conv_B": jnp.ones((CONV_K, N), jnp.float32) * 0.25,
+        "conv_C": jnp.ones((CONV_K, N), jnp.float32) * 0.25,
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "A_log": jnp.zeros((nh,), jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "norm_scale": jnp.ones((di,), jnp.float32),
+        "out_proj": jax.random.normal(ks[6], (di, d), jnp.float32) * di ** -0.5,
+    }
+
+
+def mamba2(p, x, cfg, cache=None, chunk=64):
+    B, S, d = x.shape
+    di, N = cfg.d_inner, cfg.ssm_state
+    hd = cfg.ssm_head_dim
+    nh = di // hd
+
+    def proj(w):
+        return jnp.einsum("bsd,de->bse", cast(x), cast(w),
+                          preferred_element_type=jnp.float32).astype(compute_dtype())
+
+    z, x_raw, B_raw, C_raw, dt_in = (proj(p["in_z"]), proj(p["in_x"]),
+                                     proj(p["in_B"]), proj(p["in_C"]),
+                                     proj(p["in_dt"]))
+    cs_prev = cache["conv"] if cache is not None else None
+    # depthwise conv applies per channel, so convolve components separately
+    x_in, ncx = causal_conv(x_raw, p["conv_x"],
+                            None if cs_prev is None else cs_prev["x"])
+    Bm, ncb = causal_conv(B_raw, p["conv_B"],
+                          None if cs_prev is None else cs_prev["B"])
+    Cm, ncc = causal_conv(C_raw, p["conv_C"],
+                          None if cs_prev is None else cs_prev["C"])
+    new_conv = {"x": ncx, "B": ncb, "C": ncc}
+    dt = jax.nn.softplus(dt_in.astype(jnp.float32) + p["dt_bias"])   # (B,S,nh)
+    A = -jnp.exp(p["A_log"])                                          # (nh,)
+    xh = x_in.reshape(B, S, nh, hd)
+
+    state0 = cache["ssm"] if cache is not None else jnp.zeros((B, nh, hd, N), jnp.float32)
+
+    def ab_of(dt_c, xh_c, B_c):
+        a = jnp.exp(dt_c * A)[..., None, None]               # (B,cs,nh,1,1)
+        b = (dt_c[..., None] * xh_c.astype(jnp.float32))[..., None] \
+            * B_c[:, :, None, None, :].astype(jnp.float32)   # (B,cs,nh,hd,N)
+        return a, b
+
+    if S == 1:
+        a, b = ab_of(dt, xh, Bm)
+        h = a[:, 0] * state0 + b[:, 0]
+        y = jnp.einsum("bhdn,bn->bhd", h, Cm[:, 0].astype(jnp.float32),
+                       preferred_element_type=jnp.float32)[:, None]
+        new_state = h
+    else:
+        cs = min(chunk, S)
+        while S % cs:  # largest divisor of S <= requested chunk
+            cs -= 1
+        nc = S // cs
+
+        def to_chunks(t):
+            return jnp.moveaxis(t.reshape((B, nc, cs) + t.shape[2:]), 1, 0)
+
+        def step_scan(state, chunk_in):
+            dt_c, xh_c, B_c, C_c = chunk_in
+            a, b = ab_of(dt_c, xh_c, B_c)
+            # broadcast scalar decay to the full state shape for the scan
+            a = jnp.broadcast_to(a, b.shape)
+            h, new_state = _solve_chunk(a, b, state)          # (B,cs,nh,hd,N)
+            y = jnp.einsum("bshdn,bsn->bshd", h, C_c.astype(jnp.float32),
+                           preferred_element_type=jnp.float32)
+            return new_state, y
+
+        def step_ssd(state, chunk_in):
+            """SSD quadratic form (the real mamba-2 algorithm): intra-chunk
+            outputs via (cs x cs) attention-like matmuls; the
+            (B,cs,nh,hd,N) discretized tensor is never materialized."""
+            dt_c, xh_c, B_c, C_c = chunk_in
+            dt32 = dt_c.astype(jnp.float32)                   # (B,cs,nh)
+            xh32 = xh_c.astype(jnp.float32)                   # (B,cs,nh,hd)
+            la = jnp.cumsum(dt32 * A, axis=1)                 # log-decay prefix
+            cb = jnp.einsum("btn,bsn->bts", C_c.astype(jnp.float32),
+                            B_c.astype(jnp.float32),
+                            preferred_element_type=jnp.float32)
+            ddec = la[:, :, None, :] - la[:, None, :, :]      # (B,t,s,nh)
+            causal = jnp.tril(jnp.ones((cs, cs), bool))
+            w = jnp.where(causal[None, :, :, None],
+                          jnp.exp(jnp.minimum(ddec, 0.0)), 0.0)
+            scores = cb[..., None] * w * dt32[:, None, :, :]  # (B,t,s,nh)
+            y_intra = jnp.einsum("btsh,bshd->bthd", scores, xh32,
+                                 preferred_element_type=jnp.float32)
+            # carry-in state read through C_t with decay e^{la_t}
+            y_inter = jnp.einsum("btn,bhdn,bth->bthd",
+                                 C_c.astype(jnp.float32), state, jnp.exp(la),
+                                 preferred_element_type=jnp.float32)
+            # state: decay to chunk end + decayed outer products
+            w_end = jnp.exp(la[:, -1:, :] - la) * dt32        # (B,cs,nh)
+            new_state = jnp.exp(la[:, -1])[:, :, None, None] * state \
+                + jnp.einsum("bsh,bshd,bsn->bhdn", w_end, xh32,
+                             B_c.astype(jnp.float32),
+                             preferred_element_type=jnp.float32)
+            return new_state, y_intra + y_inter
+
+        step = step_ssd if mamba2_impl() == "ssd" else step_scan
+
+        new_state, ys = _chunk_scan(
+            step, (to_chunks(dt), to_chunks(xh), to_chunks(Bm), to_chunks(Cm)),
+            state0)
+        y = jnp.moveaxis(ys, 0, 1).reshape(B, S, nh, hd)
+
+    if S == 1:
+        y = y.reshape(B, 1, nh, hd)
+    y = y + p["D"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(B, S, di)
+    # gated RMSNorm (mamba2 standard)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(y * y, axis=-1, keepdims=True)
+    y = y * jax.lax.rsqrt(var + cfg.norm_eps) * p["norm_scale"]
+    out = jnp.einsum("bse,ed->bsd", y.astype(compute_dtype()), cast(p["out_proj"]),
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+    return out, {"ssm": new_state, "conv": new_conv}

@@ -1,0 +1,423 @@
+"""Model family assembly: decoder-only, MoE, SSM, hybrid, encoder-decoder.
+
+Layer stacks are ``lax.scan`` over stacked (L, ...) parameter pytrees —
+one layer body in the HLO regardless of depth, which keeps the 512-device
+SPMD compile tractable for 64-layer models.  Decode caches are stacked the
+same way and threaded through the scan as xs/ys.
+
+Families (cfg.family):
+  dense | moe | vlm : decoder-only LM (vlm = early-fusion token stream)
+  ssm               : mamba1 stack (attention-free)
+  hybrid            : mamba2 stack + one weight-shared attention block
+                      applied every cfg.hybrid_period layers (zamba2)
+  encdec            : whisper-style encoder + causal decoder w/ cross-attn
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import ssm as S
+from repro.models.layers import compute_dtype, cast, rms_norm
+
+
+# --------------------------------------------------------------------------
+# parameter init
+# --------------------------------------------------------------------------
+
+def _stacked(init_fn, key, n):
+    return jax.vmap(init_fn)(jax.random.split(key, n))
+
+
+def _dense_block_params(key, cfg):
+    k1, k2 = jax.random.split(key)
+    p = {
+        "ln1": jnp.ones((cfg.d_model,), jnp.float32),
+        "ln2": jnp.ones((cfg.d_model,), jnp.float32),
+        "attn": L.attention_params(k1, cfg),
+    }
+    if cfg.is_moe:
+        p["moe"] = L.moe_params(k2, cfg)
+    else:
+        p["mlp"] = L.swiglu_params(k2, cfg)
+    return p
+
+
+def _encdec_dec_block_params(key, cfg):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "ln1": jnp.ones((cfg.d_model,), jnp.float32),
+        "ln_x": jnp.ones((cfg.d_model,), jnp.float32),
+        "ln2": jnp.ones((cfg.d_model,), jnp.float32),
+        "attn": L.attention_params(k1, cfg),
+        "xattn": L.attention_params(k2, cfg),
+        "mlp": L.swiglu_params(k3, cfg),
+    }
+
+
+def _ssm_block_params(key, cfg):
+    fn = S.mamba1_params if cfg.ssm_version == 1 else S.mamba2_params
+    return {"ln": jnp.ones((cfg.d_model,), jnp.float32), "mixer": fn(key, cfg)}
+
+
+def init_params(key, cfg) -> Dict[str, Any]:
+    keys = jax.random.split(key, 8)
+    params: Dict[str, Any] = {
+        "embed": jax.random.normal(keys[0], (cfg.vocab, cfg.d_model),
+                                   jnp.float32) * cfg.d_model ** -0.5,
+        "final_norm": jnp.ones((cfg.d_model,), jnp.float32),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = jax.random.normal(
+            keys[1], (cfg.d_model, cfg.vocab), jnp.float32) * cfg.d_model ** -0.5
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        params["layers"] = _stacked(
+            lambda k: _dense_block_params(k, cfg), keys[2], cfg.n_layers)
+    elif cfg.family == "ssm":
+        params["layers"] = _stacked(
+            lambda k: _ssm_block_params(k, cfg), keys[2], cfg.n_layers)
+    elif cfg.family == "hybrid":
+        params["layers"] = _stacked(
+            lambda k: _ssm_block_params(k, cfg), keys[2], cfg.n_layers)
+        params["shared_attn"] = _dense_block_params(keys[3], cfg)
+    elif cfg.family == "encdec":
+        params["enc_layers"] = _stacked(
+            lambda k: _dense_block_params(k, cfg), keys[2], cfg.n_enc_layers)
+        params["enc_norm"] = jnp.ones((cfg.d_model,), jnp.float32)
+        params["layers"] = _stacked(
+            lambda k: _encdec_dec_block_params(k, cfg), keys[3], cfg.n_layers)
+    else:
+        raise ValueError(cfg.family)
+    return params
+
+
+# --------------------------------------------------------------------------
+# decode caches
+# --------------------------------------------------------------------------
+
+def init_cache(cfg, batch: int, max_seq: int) -> Dict[str, Any]:
+    """Abstract-safe cache init (pure shapes, works under eval_shape)."""
+    Hkv, hd = cfg.n_kv_heads, cfg.hd
+    Ld = cfg.n_layers
+
+    def attn_cache(n, seq):
+        c = {
+            "k": jnp.zeros((n, batch, seq, Hkv, hd), compute_dtype()),
+            "v": jnp.zeros((n, batch, seq, Hkv, hd), compute_dtype()),
+        }
+        if cfg.swa_window and cfg.swa_window < max_seq:
+            c["pos"] = jnp.full((n, seq), -1, jnp.int32)  # ring-slot abs pos
+        return c
+
+    def ssm_cache(n):
+        K = S.CONV_K - 1
+        if cfg.ssm_version == 1:
+            st = jnp.zeros((n, batch, cfg.d_inner, cfg.ssm_state), jnp.float32)
+            conv = jnp.zeros((n, batch, K, cfg.d_inner), compute_dtype())
+        else:
+            nh = cfg.d_inner // cfg.ssm_head_dim
+            st = jnp.zeros((n, batch, nh, cfg.ssm_head_dim, cfg.ssm_state),
+                           jnp.float32)
+            conv = {
+                "x": jnp.zeros((n, batch, K, cfg.d_inner), compute_dtype()),
+                "B": jnp.zeros((n, batch, K, cfg.ssm_state), compute_dtype()),
+                "C": jnp.zeros((n, batch, K, cfg.ssm_state), compute_dtype()),
+            }
+        return {"ssm": st, "conv": conv}
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        seq = min(max_seq, cfg.swa_window) if cfg.swa_window else max_seq
+        return {"attn": attn_cache(Ld, seq)}
+    if cfg.family == "ssm":
+        return {"ssm": ssm_cache(Ld)}
+    if cfg.family == "hybrid":
+        n_shared = cfg.n_layers // cfg.hybrid_period
+        return {"ssm": ssm_cache(Ld), "attn": attn_cache(n_shared, max_seq)}
+    if cfg.family == "encdec":
+        return {
+            "attn": attn_cache(Ld, max_seq),
+            "cross_k": jnp.zeros((Ld, batch, cfg.enc_seq, Hkv, hd), compute_dtype()),
+            "cross_v": jnp.zeros((Ld, batch, cfg.enc_seq, Hkv, hd), compute_dtype()),
+        }
+    raise ValueError(cfg.family)
+
+
+# --------------------------------------------------------------------------
+# ring-buffer windowed KV (SWA decode) helpers
+# --------------------------------------------------------------------------
+
+def _swa_decode_attn(p, cfg, x, cache_k, cache_v, cache_slot_pos, cache_pos):
+    """Single-token attention against a ring-buffer window cache.
+
+    cache_k/v: (B, W, Hkv, hd); cache_slot_pos: (W,) absolute positions.
+    """
+    B = x.shape[0]
+    W = cache_k.shape[1]
+    H, hd = p["wq"].shape[1:]
+    Hkv = p["wk"].shape[1]
+    pos_b = jnp.full((B, 1), 0) + cache_pos
+    xq = jnp.einsum("bsd,dnh->bsnh", cast(x), cast(p["wq"]),
+                    preferred_element_type=jnp.float32).astype(compute_dtype())
+    xk = jnp.einsum("bsd,dkh->bskh", cast(x), cast(p["wk"]),
+                    preferred_element_type=jnp.float32).astype(compute_dtype())
+    xv = jnp.einsum("bsd,dkh->bskh", cast(x), cast(p["wv"]),
+                    preferred_element_type=jnp.float32).astype(compute_dtype())
+    if cfg.qk_norm:
+        xq = rms_norm(xq, p["q_norm"], cfg.norm_eps)
+        xk = rms_norm(xk, p["k_norm"], cfg.norm_eps)
+    xq = L.rope(xq, pos_b, cfg.rope_theta)
+    xk = L.rope(xk, pos_b, cfg.rope_theta)
+
+    slot = jnp.mod(cache_pos, W)
+    k_all = jax.lax.dynamic_update_slice_in_dim(cache_k, xk, slot, 1)
+    v_all = jax.lax.dynamic_update_slice_in_dim(cache_v, xv, slot, 1)
+    slot_pos = cache_slot_pos.at[slot].set(cache_pos)
+
+    k_rep = L.repeat_kv(k_all, H // Hkv)
+    v_rep = L.repeat_kv(v_all, H // Hkv)
+    logits = jnp.einsum("bsnh,bwnh->bsnw", xq, k_rep,
+                        preferred_element_type=jnp.float32) / (hd ** 0.5)
+    valid = (slot_pos >= 0) & (slot_pos <= cache_pos) \
+        & (slot_pos > cache_pos - cfg.swa_window)
+    logits = jnp.where(valid[None, None, None, :], logits, -jnp.inf)
+    prob = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bsnw,bwnh->bsnh", prob.astype(v_rep.dtype), v_rep,
+                     preferred_element_type=jnp.float32).astype(compute_dtype())
+    proj = jnp.einsum("bsnh,nhd->bsd", out, cast(p["wo"]),
+                      preferred_element_type=jnp.float32).astype(x.dtype)
+    return proj, k_all, v_all, slot_pos
+
+
+# --------------------------------------------------------------------------
+# blocks
+# --------------------------------------------------------------------------
+
+def _write_prefill_cache(cache, kv, cfg):
+    """Write a prompt's post-rope k/v (B, S, Hkv, hd) into a decode cache."""
+    S = kv["k"].shape[1]
+    if "pos" in cache:  # ring buffer (SWA): keep the last min(S, W) tokens
+        W = cache["k"].shape[1]
+        keep = min(S, W)
+        pos = jnp.arange(S - keep, S)
+        slots = jnp.mod(pos, W)
+        k = cache["k"].at[:, slots].set(kv["k"][:, -keep:])
+        v = cache["v"].at[:, slots].set(kv["v"][:, -keep:])
+        sp = cache["pos"].at[slots].set(pos)
+        return {"k": k, "v": v, "pos": sp}
+    k = jax.lax.dynamic_update_slice_in_dim(cache["k"], kv["k"], 0, 1)
+    v = jax.lax.dynamic_update_slice_in_dim(cache["v"], kv["v"], 0, 1)
+    return {"k": k, "v": v}
+
+
+def _dense_block(p, x, cfg, positions, cache, cache_pos, kv_chunk):
+    aux = jnp.float32(0.0)
+    S = x.shape[1]
+    h_in = rms_norm(x, p["ln1"], cfg.norm_eps)
+    if cache is not None and S == 1 and "pos" in cache:
+        h, k, v, sp = _swa_decode_attn(
+            p["attn"], cfg, h_in, cache["k"], cache["v"], cache["pos"], cache_pos)
+        new_cache = {"k": k, "v": v, "pos": sp}
+    elif cache is not None and S == 1:
+        h, nc = L.attention(p["attn"], h_in, cfg=cfg, positions=positions,
+                            kv_cache={"k": cache["k"], "v": cache["v"]},
+                            cache_pos=cache_pos, kv_chunk=kv_chunk)
+        new_cache = nc
+    elif cache is not None:
+        # prefill: chunked self-attention + one-shot cache write
+        h, kv = L.attention(p["attn"], h_in, cfg=cfg, positions=positions,
+                            kv_chunk=kv_chunk)
+        new_cache = _write_prefill_cache(cache, kv, cfg)
+    else:
+        h, _ = L.attention(p["attn"], h_in, cfg=cfg, positions=positions,
+                           kv_chunk=kv_chunk)
+        new_cache = None
+    x = x + h
+    h_in = rms_norm(x, p["ln2"], cfg.norm_eps)
+    if "moe" in p:
+        h, aux = L.moe(p["moe"], h_in, cfg)
+    else:
+        h = L.swiglu(p["mlp"], h_in)
+    return x + h, new_cache, aux
+
+
+def _ssm_block(p, x, cfg, cache):
+    h, new_cache = (S.mamba1 if cfg.ssm_version == 1 else S.mamba2)(
+        p["mixer"], rms_norm(x, p["ln"], cfg.norm_eps), cfg, cache)
+    return x + h, new_cache
+
+
+# --------------------------------------------------------------------------
+# family forwards.  All return (hidden, new_caches, aux_loss).
+# --------------------------------------------------------------------------
+
+def _scan_layers(body, x, stacked_params, stacked_cache, remat, act_spec=None):
+    """scan over stacked layer params (+ optional stacked caches)."""
+    def step(carry, xs):
+        x, aux = carry
+        x = L.constrain(x, act_spec)
+        p, c = xs
+        if remat:
+            fn = jax.checkpoint(lambda p_, x_, c_: body(p_, x_, c_),
+                                prevent_cse=False)
+            x, nc, a = fn(p, x, c)
+        else:
+            x, nc, a = body(p, x, c)
+        return (x, aux + a), nc
+
+    (x, aux), new_caches = jax.lax.scan(
+        step, (x, jnp.float32(0.0)), (stacked_params, stacked_cache))
+    return x, new_caches, aux
+
+
+def forward(params, cfg, x, positions, caches=None, cache_pos=None,
+            enc_out=None, remat=False, kv_chunk=512, act_spec=None):
+    """Run the layer stack.  x: (B, S, d) hidden states (already embedded).
+
+    caches: stacked decode caches (None for train/prefill-from-scratch...
+    prefill DOES pass caches to fill them).  Returns (hidden, caches, aux).
+    """
+    fam = cfg.family
+
+    if fam in ("dense", "moe", "vlm"):
+        c = caches["attn"] if caches is not None else None
+
+        def body(p, x, cache):
+            return _dense_block(p, x, cfg, positions, cache, cache_pos, kv_chunk)
+
+        x, nc, aux = _scan_layers(body, x, params["layers"], c, remat, act_spec)
+        new_caches = {"attn": nc} if caches is not None else None
+        return x, new_caches, aux
+
+    if fam == "ssm":
+        c = caches["ssm"] if caches is not None else None
+
+        def body(p, x, cache):
+            x, nc = _ssm_block(p, x, cfg, cache)
+            return x, nc, jnp.float32(0.0)
+
+        x, nc, aux = _scan_layers(body, x, params["layers"], c, remat, act_spec)
+        new_caches = {"ssm": nc} if caches is not None else None
+        return x, new_caches, aux
+
+    if fam == "hybrid":
+        period = cfg.hybrid_period
+        n_groups = cfg.n_layers // period
+        ssm_c = caches["ssm"] if caches is not None else None
+        attn_c = caches["attn"] if caches is not None else None
+        new_ssm, new_attn = [], []
+        aux = jnp.float32(0.0)
+
+        def body(p, x, cache):
+            x, nc = _ssm_block(p, x, cfg, cache)
+            return x, nc, jnp.float32(0.0)
+
+        for g in range(n_groups):
+            sl = lambda t: jax.tree.map(
+                lambda a: jax.lax.slice_in_dim(a, g * period, (g + 1) * period, axis=0), t)
+            grp_params = sl(params["layers"])
+            grp_cache = sl(ssm_c) if ssm_c is not None else None
+            x, nc, _ = _scan_layers(body, x, grp_params, grp_cache, remat,
+                                    act_spec)
+            if ssm_c is not None:
+                new_ssm.append(nc)
+            ac = jax.tree.map(lambda a: a[g], attn_c) if attn_c is not None else None
+            x = L.constrain(x, act_spec)
+            x, nac, a = _dense_block(params["shared_attn"], x, cfg, positions,
+                                     ac, cache_pos, kv_chunk)
+            aux = aux + a
+            if attn_c is not None:
+                new_attn.append(nac)
+        new_caches = None
+        if caches is not None:
+            new_caches = {
+                "ssm": jax.tree.map(lambda *xs: jnp.concatenate(xs, 0), *new_ssm),
+                "attn": jax.tree.map(lambda *xs: jnp.stack(xs, 0), *new_attn),
+            }
+        return x, new_caches, aux
+
+    if fam == "encdec":
+        # decoder over x with cross attention on enc_out (B, Senc, d) or
+        # precomputed cross k/v in caches
+        self_c = caches["attn"] if caches is not None else None
+
+        if caches is not None and enc_out is None:
+            cross_k, cross_v = caches["cross_k"], caches["cross_v"]
+        else:
+            # compute cross k/v from encoder output per layer inside scan
+            cross_k = cross_v = None
+
+        def body(p, x, xs):
+            cache, ck, cv = xs
+            aux = jnp.float32(0.0)
+            Scur = x.shape[1]
+            h_in = rms_norm(x, p["ln1"], cfg.norm_eps)
+            if cache is not None and Scur == 1:
+                h, nc = L.attention(p["attn"], h_in, cfg=cfg, positions=positions,
+                                    kv_cache={"k": cache["k"], "v": cache["v"]},
+                                    cache_pos=cache_pos, kv_chunk=kv_chunk)
+            elif cache is not None:
+                h, kv = L.attention(p["attn"], h_in, cfg=cfg, positions=positions,
+                                    kv_chunk=kv_chunk)
+                nc = _write_prefill_cache(cache, kv, cfg)
+            else:
+                h, nc = L.attention(p["attn"], h_in, cfg=cfg, positions=positions,
+                                    kv_chunk=kv_chunk)
+            x = x + h
+            # cross attention
+            if ck is None:
+                ck = jnp.einsum("bsd,dkh->bskh", cast(enc_out), cast(p["xattn"]["wk"]),
+                                preferred_element_type=jnp.float32).astype(compute_dtype())
+                cv = jnp.einsum("bsd,dkh->bskh", cast(enc_out), cast(p["xattn"]["wv"]),
+                                preferred_element_type=jnp.float32).astype(compute_dtype())
+            h_in = rms_norm(x, p["ln_x"], cfg.norm_eps)
+            h, _ = L.attention(p["xattn"], h_in, cfg=cfg, positions=positions,
+                               cross_kv=(ck, cv), kv_chunk=kv_chunk)
+            x = x + h
+            h = L.swiglu(p["mlp"], rms_norm(x, p["ln2"], cfg.norm_eps))
+            return x + h, (nc, ck, cv), aux
+
+        def step(carry, xs):
+            x, aux = carry
+            x = L.constrain(x, act_spec)
+            p, cache, ck, cv = xs
+            if remat:
+                fn = jax.checkpoint(
+                    lambda p_, x_, c_, k_, v_: body(p_, x_, (c_, k_, v_)),
+                    prevent_cse=False)
+                x, out, a = fn(p, x, cache, ck, cv)
+            else:
+                x, out, a = body(p, x, (cache, ck, cv))
+            return (x, aux + a), out
+
+        (x, aux), outs = jax.lax.scan(
+            step, (x, jnp.float32(0.0)),
+            (params["layers"], self_c, cross_k, cross_v))
+        new_caches = None
+        if caches is not None:
+            nc, ck, cv = outs
+            new_caches = {"attn": nc, "cross_k": ck, "cross_v": cv}
+        return x, new_caches, aux
+
+    raise ValueError(fam)
+
+
+def encode(params, cfg, enc_in, remat=False, kv_chunk=512, act_spec=None):
+    """Encoder stack (whisper): enc_in (B, Senc, d) stub frame embeddings."""
+    positions = jnp.arange(enc_in.shape[1])
+
+    def body(p, x, cache):
+        h, _ = L.attention(p["attn"], rms_norm(x, p["ln1"], cfg.norm_eps),
+                           cfg=cfg, positions=positions, causal=False,
+                           kv_chunk=kv_chunk)
+        x = x + h
+        h = L.swiglu(p["mlp"], rms_norm(x, p["ln2"], cfg.norm_eps))
+        return x + h, None, jnp.float32(0.0)
+
+    x, _, _ = _scan_layers(body, enc_in, params["enc_layers"], None, remat,
+                           act_spec)
+    return rms_norm(x, params["enc_norm"], cfg.norm_eps)

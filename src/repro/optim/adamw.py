@@ -1,0 +1,72 @@
+"""AdamW + cosine schedule + global-norm clipping, as pure pytree ops.
+
+Optimizer state shards exactly like the parameters (same PartitionSpec
+tree), which is what makes the FSDP-style ("pod","data") parameter
+sharding carry over to m/v for the 314B-parameter configs.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    betas: Tuple[float, float] = (0.9, 0.95)
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    min_lr_frac: float = 0.1
+
+
+def init_state(params) -> Dict[str, Any]:
+    zeros = lambda: jax.tree.map(jnp.zeros_like, params)
+    return {"m": zeros(), "v": zeros(), "step": jnp.int32(0)}
+
+
+def schedule(cfg: AdamWConfig, step):
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    frac = cfg.min_lr_frac + (1.0 - cfg.min_lr_frac) * cos
+    return cfg.lr * warm * frac
+
+
+def global_norm(tree):
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(l.astype(jnp.float32) ** 2) for l in leaves))
+
+
+def clip_by_global_norm(grads, max_norm):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), norm
+
+
+def apply(cfg: AdamWConfig, params, state, grads):
+    """One AdamW step.  Returns (new_params, new_state, metrics)."""
+    grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    step = state["step"] + 1
+    lr = schedule(cfg, step)
+    b1, b2 = cfg.betas
+    m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g, state["m"], grads)
+    v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, state["v"], grads)
+    t = step.astype(jnp.float32)
+    mc = 1 - b1 ** t
+    vc = 1 - b2 ** t
+
+    def upd(p, m_, v_):
+        u = (m_ / mc) / (jnp.sqrt(v_ / vc) + cfg.eps)
+        return p - lr * (u + cfg.weight_decay * p)
+
+    new_params = jax.tree.map(upd, params, m, v)
+    return new_params, {"m": m, "v": v, "step": step}, \
+        {"grad_norm": gnorm, "lr": lr}

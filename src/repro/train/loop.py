@@ -1,0 +1,128 @@
+"""Fault-tolerant training driver.
+
+Features (DESIGN.md §6):
+  * auto-resume from the latest checkpoint (atomic LATEST pointer);
+  * periodic async checkpointing (serialization overlaps training);
+  * preemption handling: SIGTERM/SIGINT triggers a final blocking save;
+  * deterministic data skip-ahead (stateless stream indexed by step);
+  * NaN-step skipping inside the jitted step (see steps.py);
+  * straggler + loss-spike detection via the QO step-time/loss sketches —
+    the paper's observer watching the trainer itself;
+  * elastic restart: if the mesh changed between runs, restored leaves are
+    re-placed via checkpoint.reshard onto the new sharding tree.
+"""
+from __future__ import annotations
+
+import signal
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.ckpt import Checkpointer, reshard
+from repro.models import model as M
+from repro.optim import adamw
+from repro.train import monitor as MON
+from repro.train import steps as ST
+
+
+@dataclass
+class LoopConfig:
+    total_steps: int = 200
+    ckpt_every: int = 50
+    log_every: int = 10
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    microbatch: int = 0
+    remat: bool = True
+    kv_chunk: int = 512
+    seed: int = 0
+
+
+class Trainer:
+    def __init__(self, cfg, shape, mesh, data, loop_cfg: LoopConfig,
+                 opt_cfg: Optional[adamw.AdamWConfig] = None):
+        self.cfg, self.shape, self.mesh = cfg, shape, mesh
+        self.data = data
+        self.lc = loop_cfg
+        self.opt_cfg = opt_cfg or adamw.AdamWConfig(
+            total_steps=loop_cfg.total_steps)
+        self.ckpt = Checkpointer(loop_cfg.ckpt_dir)
+        self._preempted = False
+        (self.step_fn, self.in_sh, _, shapes) = ST.build_train_step(
+            cfg, shape, mesh, self.opt_cfg, microbatch=loop_cfg.microbatch,
+            remat=loop_cfg.remat, kv_chunk=loop_cfg.kv_chunk)
+        self.pshapes, self.oshapes, self.bshapes, self.mshape = shapes
+
+    # -- state ------------------------------------------------------------
+
+    def init_or_restore(self):
+        start = self.ckpt.latest_step()
+        if start is not None:
+            host = self.ckpt.restore(
+                start, {"params": self.pshapes, "opt": self.oshapes})
+            params = reshard(host["params"], self.in_sh[0])
+            opt = reshard(host["opt"], self.in_sh[1])
+            mon = MON.init_monitor()
+            return params, opt, mon, start
+        with self.mesh:
+            params = jax.jit(
+                lambda k: M.init_params(k, self.cfg),
+                out_shardings=self.in_sh[0])(jax.random.PRNGKey(self.lc.seed))
+            opt = jax.jit(adamw.init_state,
+                          out_shardings=self.in_sh[1])(params)
+        return params, opt, MON.init_monitor(), 0
+
+    # -- preemption -------------------------------------------------------
+
+    def _install_signals(self):
+        def handler(sig, frame):
+            self._preempted = True
+        for s in (signal.SIGTERM, signal.SIGINT):
+            try:
+                signal.signal(s, handler)
+            except ValueError:
+                pass  # not on main thread (tests)
+
+    # -- run --------------------------------------------------------------
+
+    def run(self, log_fn: Callable[[Dict[str, Any]], None] = print):
+        self._install_signals()
+        params, opt, mon, start = self.init_or_restore()
+        history = []
+        with self.mesh:
+            for step in range(start, self.lc.total_steps):
+                batch = self.data.batch(step)  # deterministic skip-ahead
+                t0 = time.perf_counter()
+                params, opt, metrics, mon = self.step_fn(params, opt, batch, mon)
+                jax.block_until_ready(metrics["loss"])
+                dt = time.perf_counter() - t0
+                mon = MON.observe(mon, step_time=jnp.float32(dt))
+
+                if step % self.lc.log_every == 0 or step == self.lc.total_steps - 1:
+                    rec = {
+                        "step": step,
+                        "loss": float(metrics["loss"]),
+                        "grad_norm": float(metrics["grad_norm"]),
+                        "lr": float(metrics["lr"]),
+                        "skipped": float(metrics["skipped"]),
+                        "sec_per_step": dt,
+                        "straggler": bool(MON.is_straggler(mon, jnp.float32(dt))),
+                        "loss_spike": bool(MON.loss_spike(mon, metrics["loss"])),
+                    }
+                    history.append(rec)
+                    log_fn(rec)
+
+                if (step + 1) % self.lc.ckpt_every == 0:
+                    self.ckpt.save(step + 1, {"params": params, "opt": opt})
+
+                if self._preempted:
+                    log_fn({"step": step, "event": "preempted — final save"})
+                    self.ckpt.save(step + 1, {"params": params, "opt": opt},
+                                   blocking=True)
+                    return params, opt, mon, history
+            self.ckpt.save(self.lc.total_steps, {"params": params, "opt": opt},
+                           blocking=True)
+        return params, opt, mon, history

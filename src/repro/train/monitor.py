@@ -1,0 +1,71 @@
+"""QO telemetry — the paper's observer as a first-class runtime feature.
+
+A monitor is a dict of QO tables (one per tracked signal).  Each train
+step folds the step's scalars into the tables with the O(1) quantized
+update (paper Algorithm 1); quantiles/variances are read with the
+sub-linear query (Algorithm 2 / sketch.quantile).  The tables are a few
+KB regardless of how long training runs or how many chips participate —
+the paper's memory argument applied to telemetry.
+
+Used by the fault-tolerant loop for:
+  * straggler detection: a step time above the p99 of the step-time sketch
+    flags the step (would trigger re-slicing in a real deployment);
+  * loss-spike / divergence detection: loss above mean + 6 sigma of the
+    loss sketch is reported (the NaN-skip in the step handles the acute
+    case, the sketch catches slow drift).
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import qo as qo_lib
+from repro.core import sketch, stats
+
+BINS = 128
+SIGNALS = ("loss", "grad_norm", "step_time")
+
+
+def init_monitor() -> Dict[str, qo_lib.QOTable]:
+    return {
+        # cold-start fixed radii (paper §5.2); loss/grad live on ~1e-2..1e2
+        "loss": qo_lib.init(BINS, radius=0.1, origin=5.0),
+        "grad_norm": qo_lib.init(BINS, radius=0.05, origin=1.0),
+        "step_time": qo_lib.init(BINS, radius=0.05, origin=1.0),
+    }
+
+
+def monitor_specs():
+    """Monitor tables are tiny: replicate."""
+    m = jax.eval_shape(init_monitor)
+    return jax.tree.map(lambda _: P(), m)
+
+
+def observe(mon, *, loss=None, grad_norm=None, step_time=None):
+    new = dict(mon)
+    for name, val in (("loss", loss), ("grad_norm", grad_norm),
+                      ("step_time", step_time)):
+        if val is not None:
+            v = jnp.reshape(val.astype(jnp.float32), (1,))
+            new[name] = qo_lib.update(mon[name], v, v)
+    return new
+
+
+def is_straggler(mon, step_time, q=0.99, min_n=32):
+    t = mon["step_time"]
+    tot = qo_lib.total_stats(t)
+    thr = sketch.quantile(t, jnp.asarray(q))
+    return (tot["n"] >= min_n) & (step_time > thr)
+
+
+def loss_spike(mon, loss, n_sigma=6.0, min_n=32):
+    tot = qo_lib.total_stats(mon["loss"])
+    sd = stats.stddev(tot)
+    return (tot["n"] >= min_n) & (loss > tot["mean"] + n_sigma * sd)
+
+
+def summaries(mon):
+    return {k: sketch.summary(v) for k, v in mon.items()}

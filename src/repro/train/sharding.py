@@ -1,0 +1,231 @@
+"""PartitionSpec rules for params, optimizer state, batches and caches.
+
+Strategy (DESIGN.md §6): TP over the 16-way "model" axis + FSDP over the
+data axes ("pod","data") — required for grok-1-314b, whose optimizer state
+would otherwise need 235 GB/chip.  Rules are name+shape based over the
+param pytree; every rule falls back to replication when a dimension does
+not divide the mesh axis (e.g. whisper's 51865 vocab, 8-way KV heads).
+
+Logical mapping:
+  d_model / d_inner rows  ->  fsdp axes      (all-gathered for the matmul)
+  heads / d_ff / vocab    ->  "model" (TP)
+  experts                 ->  "model" when E % tp == 0 (EP), else d_ff TP
+  batch                   ->  fsdp axes
+  decode KV cache         ->  batch over fsdp; heads over model when
+                              divisible, else sequence over model
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def mesh_axes(mesh: Mesh) -> Tuple[Tuple[str, ...], str]:
+    """Returns (fsdp_axes, tp_axis)."""
+    names = mesh.axis_names
+    tp = "model"
+    fsdp = tuple(n for n in names if n != tp)
+    return fsdp, tp
+
+
+def _div(n: int, size: int) -> bool:
+    return n > 0 and n % size == 0
+
+
+def param_specs(cfg, params_shapes, mesh: Mesh, style: str = "contraction"):
+    """Pytree of PartitionSpec matching the params pytree.
+
+    ``params_shapes``: pytree of ShapeDtypeStruct (from jax.eval_shape).
+
+    style:
+      "contraction" (baseline): FSDP shards the contraction (d_model) dim of
+        weights.  XLA then often SPLITS the contraction instead of gathering
+        the weight, all-reducing full activation tensors over the data axes
+        — measured catastrophic for MoE (§Perf: grok 7.8 TB/step).
+      "gather": FSDP co-shards the weight's OUTPUT dim with TP
+        (2D sharding).  The output dim cannot be data-sharded twice (tokens
+        already are), so the partitioner must ALL-GATHER the weight shards —
+        the ZeRO-3 pattern: collective bytes scale with weights, not
+        activations.
+    """
+    fsdp, tp = mesh_axes(mesh)
+    tp_n = mesh.shape[tp]
+    fsdp_n = 1
+    for a in fsdp:
+        fsdp_n *= mesh.shape[a]
+    d = cfg.d_model
+    gather = style == "gather"
+
+    def fs(dim):  # fsdp-shard a dimension if it divides
+        return fsdp if _div(dim, fsdp_n) else None
+
+    def tps(dim):
+        return tp if _div(dim, tp_n) else None
+
+    def tp_fs(dim):
+        """2D shard over (tp, fsdp...) when divisible, else best effort."""
+        if _div(dim, tp_n * fsdp_n):
+            return (tp,) + fsdp
+        return tps(dim)
+
+    def rule(path, leaf):
+        keys = [str(getattr(p, "key", getattr(p, "idx", p))) for p in path]
+        name = keys[-1] if keys else ""
+        shp = leaf.shape
+        nd = len(shp)
+        # strip the stacked-layer leading axis for rule matching
+        core = shp[1:] if (keys and keys[0] in ("layers", "enc_layers")
+                           and nd >= 1) else shp
+
+        def spec(*core_spec):
+            pad = (None,) * (nd - len(core_spec))
+            return P(*pad, *core_spec)
+
+        if name == "embed":
+            if _div(shp[0], tp_n):
+                return P(tp, fs(shp[1]))
+            return P(None, tps(shp[1]))
+        if name == "lm_head":
+            if gather:
+                return P(None, tp_fs(shp[1]))
+            return P(fs(shp[0]), tps(shp[1]))
+        if name in ("wq", "wo"):
+            # (d, H, hd) / (H, hd, d): heads over TP
+            if name == "wq":
+                if gather:  # output dims (H, hd) 2D-sharded -> weight gather
+                    return spec(None, tps(core[1]), fs(core[2]))
+                return spec(fs(core[0]), tps(core[1]), None)
+            if gather:
+                return spec(tps(core[0]), None, fs(core[2]))
+            return spec(tps(core[0]), None, fs(core[2]))
+        if name in ("wk", "wv"):
+            if gather:
+                return spec(None, tps(core[1]), fs(core[2]))
+            return spec(fs(core[0]), tps(core[1]), None)
+        if name in ("w_gate", "w_up", "w_down", "router"):
+            if len(core) == 3:  # MoE (E, d, f) / (E, f, d)
+                E = core[0]
+                if gather:
+                    # contraction dim NEVER data-sharded; FSDP rides the
+                    # output dim (core[2]) -> partitioner gathers weights
+                    if _div(E, tp_n):  # EP: experts over tp
+                        return spec(tp, None, fs(core[2]))
+                    if name == "w_down":  # (E, f, d): f row-parallel
+                        return spec(None, tps(core[1]), fs(core[2]))
+                    return spec(None, None, tp_fs(core[2]))  # (E, d, f)
+                if _div(E, tp_n):  # EP
+                    return spec(tp, fs(core[1]) if name != "w_down" else None,
+                                None)
+                if name == "w_down":
+                    return spec(None, tps(core[1]), fs(core[2]))
+                return spec(None, fs(core[1]), tps(core[2]))
+            if name == "router":
+                return spec(fs(core[0]) if not gather else None, None)
+            if name == "w_down":
+                return spec(tps(core[0]), fs(core[1]))
+            if gather:
+                return spec(None, tp_fs(core[1]))
+            return spec(fs(core[0]), tps(core[1]))
+        if name in ("in_proj",):  # mamba1 (d, 2di)
+            if gather:
+                return spec(None, tp_fs(core[1]))
+            return spec(fs(core[0]), tps(core[1]))
+        if name in ("in_z", "in_x"):
+            if gather:
+                return spec(None, tp_fs(core[1]))
+            return spec(fs(core[0]), tps(core[1]))
+        if name in ("in_B", "in_C", "in_dt", "x_proj"):
+            return spec(None if gather else fs(core[0]), None)
+        if name == "dt_proj":  # (dt_rank, di)
+            return spec(None, tps(core[1]))
+        if name == "out_proj":  # (di, d)
+            return spec(tps(core[0]), fs(core[1]))
+        if name in ("A_log", "D", "dt_bias") and len(core) >= 1:
+            return spec(*([tps(core[0])] + [None] * (len(core) - 1)))
+        if name in ("conv_w", "conv_x"):
+            return spec(None, tps(core[1]))
+        if name in ("conv_B", "conv_C"):
+            return spec(None, None)
+        if name == "norm_scale":
+            return spec(tps(core[0]))
+        # norms, biases, small tables: replicate
+        return P(*([None] * nd))
+
+    flat, tdef = jax.tree_util.tree_flatten_with_path(params_shapes)
+    return jax.tree_util.tree_unflatten(tdef, [rule(p, l) for p, l in flat])
+
+
+def batch_specs(cfg, shape_kind: str, global_batch: int, mesh: Mesh):
+    """PartitionSpec for data batches by field name."""
+    fsdp, tp = mesh_axes(mesh)
+    fsdp_n = 1
+    for a in fsdp:
+        fsdp_n *= mesh.shape[a]
+    bspec = fsdp if _div(global_batch, fsdp_n) else None
+
+    def field(name):
+        if name in ("tokens", "labels", "loss_mask"):
+            return P(bspec, None)
+        if name == "embeds":
+            return P(bspec, None, None)
+        if name == "enc_in":
+            return P(bspec, None, None)
+        if name == "token":     # decode: (B,) or (B, d)
+            return P(bspec)
+        raise KeyError(name)
+
+    return field
+
+
+def cache_specs(cfg, batch: int, mesh: Mesh, cache_shapes):
+    """Specs for the decode-cache pytree (stacked layer leading axis)."""
+    fsdp, tp = mesh_axes(mesh)
+    tp_n = mesh.shape[tp]
+    fsdp_n = 1
+    for a in fsdp:
+        fsdp_n *= mesh.shape[a]
+    bspec = fsdp if _div(batch, fsdp_n) else None
+
+    def rule(path, leaf):
+        keys = [str(getattr(p, "key", getattr(p, "idx", p))) for p in path]
+        name = keys[-1]
+        shp = leaf.shape
+        if name in ("k", "v"):
+            # (L, B, S, Hkv, hd): heads over TP if divisible, else seq
+            if _div(shp[3], tp_n):
+                return P(None, bspec, None, tp, None)
+            if _div(shp[2], tp_n):
+                return P(None, bspec, tp, None, None)
+            return P(None, bspec, None, None, None)
+        if name == "pos":
+            return P(*([None] * len(shp)))
+        if name == "ssm":
+            # mamba1 (L,B,di,N): di over TP; mamba2 (L,B,nh,hd,N): nh over TP
+            if len(shp) == 4:
+                return P(None, bspec, tp if _div(shp[2], tp_n) else None, None)
+            return P(None, bspec, tp if _div(shp[2], tp_n) else None, None, None)
+        if name == "conv" or (len(keys) >= 2 and keys[-2] == "conv"):
+            ch = shp[-1]
+            return P(*([None, bspec, None] + [tp if _div(ch, tp_n) else None]))
+        if name in ("cross_k", "cross_v"):
+            if _div(shp[3], tp_n):
+                return P(None, bspec, None, tp, None)
+            return P(None, bspec, None, None, None)
+        return P(*([None] * len(shp)))
+
+    flat, tdef = jax.tree_util.tree_flatten_with_path(cache_shapes)
+    return jax.tree_util.tree_unflatten(tdef, [rule(p, l) for p, l in flat])
+
+
+def opt_specs(pspecs):
+    """Optimizer state shards exactly like params (m, v) + scalar step."""
+    return {"m": pspecs, "v": pspecs, "step": P()}
+
+
+def to_shardings(mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))

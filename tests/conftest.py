@@ -1,0 +1,17 @@
+"""Test config: CPU compute dtype + a few shared fixtures.
+
+NOTE: no XLA_FLAGS here on purpose — smoke tests and benches must see ONE
+device; only launch/dryrun.py forces 512 placeholder devices.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import layers as L
+
+L.set_compute_dtype(jnp.float32)  # CPU cannot execute bf16 dots
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

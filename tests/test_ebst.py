@@ -1,0 +1,53 @@
+"""E-BST / TE-BST baselines: exactness vs the batch oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ebst
+from tests.test_qo import exact_best_split
+
+
+def test_ebst_split_matches_batch_oracle(rng):
+    x = rng.normal(0, 1, 1500).astype(np.float32)
+    y = np.where(x <= -0.3, 2.0, 7.0).astype(np.float32) + \
+        0.05 * rng.normal(0, 1, 1500).astype(np.float32)
+    t = ebst.init(1500)
+    t = jax.jit(ebst.update)(t, jnp.array(x), jnp.array(y))
+    r = jax.jit(ebst.best_split)(t)
+    merit, thr = exact_best_split(x, y)
+    assert bool(r.valid)
+    np.testing.assert_allclose(float(r.threshold), thr, rtol=1e-5)
+    np.testing.assert_allclose(float(r.merit), merit, rtol=1e-3)
+
+
+def test_tebst_truncates_and_stores_fewer(rng):
+    x = rng.normal(0, 1, 2000).astype(np.float32)
+    y = (3 * x).astype(np.float32)
+    full = jax.jit(ebst.update)(ebst.init(2000), jnp.array(x), jnp.array(y))
+    trunc = jax.jit(ebst.update)(ebst.init(2000, decimals=1), jnp.array(x),
+                                 jnp.array(y))
+    assert int(trunc["size"]) < int(full["size"])
+    # split points still close (paper Fig. 3)
+    rf = jax.jit(ebst.best_split)(full)
+    rt = jax.jit(ebst.best_split)(trunc)
+    assert abs(float(rf.threshold) - float(rt.threshold)) < 0.1
+
+
+def test_ebst_duplicate_keys(rng):
+    x = np.repeat(np.array([1.0, 2.0, 3.0], np.float32), 50)
+    y = np.where(x <= 2.0, 0.0, 10.0).astype(np.float32)
+    t = jax.jit(ebst.update)(ebst.init(300), jnp.array(x), jnp.array(y))
+    assert int(t["size"]) == 3  # duplicates update stats, no new nodes
+    r = jax.jit(ebst.best_split)(t)
+    np.testing.assert_allclose(float(r.threshold), 2.0)
+    assert float(t["total"]["n"]) == 150
+
+
+def test_ebst_capacity_degrades_gracefully(rng):
+    x = rng.normal(0, 1, 500).astype(np.float32)
+    y = x.astype(np.float32)
+    t = jax.jit(ebst.update)(ebst.init(100), jnp.array(x), jnp.array(y))
+    assert int(t["size"]) == 100  # clamped
+    assert float(t["total"]["n"]) == 500  # nothing lost from total stats
+    r = jax.jit(ebst.best_split)(t)
+    assert bool(r.valid) and np.isfinite(float(r.merit))

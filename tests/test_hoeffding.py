@@ -1,0 +1,83 @@
+"""Batched Hoeffding tree regressor integration tests."""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hoeffding as ht
+from repro.data import synth
+
+
+def _train(cfg, X, y, bs=256):
+    state = ht.init_state(cfg)
+    upd = jax.jit(functools.partial(ht.update, cfg))
+    for i in range(0, len(y) - bs + 1, bs):
+        state = upd(state, jnp.array(X[i:i + bs]), jnp.array(y[i:i + bs]))
+    return state
+
+
+def test_tree_learns_piecewise_target():
+    X, y = synth.piecewise_regression(12000, n_features=4, seed=3)
+    cfg = ht.HTRConfig(n_features=4, max_nodes=63, n_bins=48,
+                       grace_period=300, max_depth=8, r0=0.25)
+    state = _train(cfg, X, y)
+    assert int(state["n_nodes"]) > 1, "tree must grow"
+    Xt, yt = synth.piecewise_regression(4000, n_features=4, seed=33)
+    pred = jax.jit(functools.partial(ht.predict, cfg))(state, jnp.array(Xt))
+    mse = float(np.mean((np.asarray(pred) - yt) ** 2))
+    base = float(np.var(yt))
+    assert mse < 0.2 * base, (mse, base)
+
+
+def test_tree_respects_capacity_and_depth():
+    X, y = synth.piecewise_regression(8000, n_features=3, seed=5)
+    cfg = ht.HTRConfig(n_features=3, max_nodes=15, n_bins=32,
+                       grace_period=100, max_depth=3, r0=0.3)
+    state = _train(cfg, X, y)
+    assert int(state["n_nodes"]) <= 15
+    assert int(jnp.max(state["depth"])) <= 3
+    # structural sanity: children of internal nodes point inside capacity
+    n = int(state["n_nodes"])
+    internal = ~np.asarray(state["is_leaf"])[:n]
+    kids = np.asarray(state["child"])[:n][internal]
+    assert (kids >= 0).all() and (kids < n).all()
+
+
+def test_tree_stationary_prediction_without_splits():
+    """Below grace period the tree is a single leaf predicting the mean."""
+    rng = np.random.default_rng(0)
+    X = rng.normal(0, 1, (150, 2)).astype(np.float32)
+    y = np.full(150, 7.5, np.float32)
+    cfg = ht.HTRConfig(n_features=2, max_nodes=7, grace_period=1000)
+    state = ht.init_state(cfg)
+    state = ht.update(cfg, state, jnp.array(X), jnp.array(y))
+    assert int(ht.n_leaves(state)) == 1
+    pred = ht.predict(cfg, state, jnp.array(X[:5]))
+    np.testing.assert_allclose(np.asarray(pred), 7.5, rtol=1e-4)
+
+
+def test_forest_vmap():
+    """A forest is just vmap over tree states."""
+    X, y = synth.piecewise_regression(4000, n_features=3, seed=7)
+    cfg = ht.HTRConfig(n_features=3, max_nodes=31, n_bins=32,
+                       grace_period=200, max_depth=6, r0=0.3)
+    n_trees = 4
+    states = jax.vmap(lambda _: ht.init_state(cfg))(jnp.arange(n_trees))
+    upd = jax.jit(jax.vmap(functools.partial(ht.update, cfg),
+                           in_axes=(0, 0, 0)))
+    bs = 250
+    rng = np.random.default_rng(0)
+    for i in range(0, 4000 - bs + 1, bs):
+        xb = np.stack([X[i:i + bs]] * n_trees)
+        yb = np.stack([y[i:i + bs]] * n_trees)
+        # poor-man's bagging: per-tree shuffled order
+        for t in range(n_trees):
+            p = rng.permutation(bs)
+            xb[t], yb[t] = xb[t][p], yb[t][p]
+        states = upd(states, jnp.array(xb), jnp.array(yb))
+    Xt, yt = synth.piecewise_regression(1000, n_features=3, seed=77)
+    preds = jax.vmap(lambda s: ht.predict(cfg, s, jnp.array(Xt)))(states)
+    ens = np.asarray(preds).mean(0)
+    mse = float(np.mean((ens - yt) ** 2))
+    assert mse < 0.3 * float(np.var(yt))

@@ -1,0 +1,131 @@
+"""QO attribute observer: split quality vs the exact oracle and E-BST."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ebst, qo, stats
+from repro.data import synth
+
+
+def exact_best_split(x, y):
+    """Exhaustive batch VR maximization (the batch-DT oracle)."""
+    order = np.argsort(x, kind="stable")
+    xs, ys = np.asarray(x, np.float64)[order], np.asarray(y, np.float64)[order]
+    n = len(ys)
+    csum, csq = np.cumsum(ys), np.cumsum(ys ** 2)
+    tot, totsq = csum[-1], csq[-1]
+    s2d = np.var(ys, ddof=1)
+    best = (-np.inf, None)
+    for i in range(n - 1):
+        if xs[i] == xs[i + 1]:
+            continue
+        nl, nr = i + 1, n - i - 1
+        vl = (csq[i] - csum[i] ** 2 / nl) / (nl - 1) if nl > 1 else 0.0
+        vr = ((totsq - csq[i]) - (tot - csum[i]) ** 2 / nr) / (nr - 1) if nr > 1 else 0.0
+        m = s2d - nl / n * vl - nr / n * vr
+        if m > best[0]:
+            best = (m, xs[i])
+    return best
+
+
+def test_qo_finds_planted_split(rng):
+    x = rng.normal(0, 1, 8000).astype(np.float32)
+    y = np.where(x <= 0.4, 1.0, 8.0) + 0.05 * rng.normal(0, 1, 8000)
+    t = qo.init(256, radius=0.05)
+    t = qo.update(t, jnp.array(x), jnp.array(y.astype(np.float32)))
+    r = qo.best_split(t)
+    assert bool(r.valid)
+    assert abs(float(r.threshold) - 0.4) < 0.05
+    merit_exact, _ = exact_best_split(x, y)
+    assert float(r.merit) >= 0.9 * merit_exact  # paper §6.1: similar merit
+
+
+def test_qo_merit_close_to_ebst_on_paper_protocol():
+    """Paper Fig. 1: QO's VR within a few % of E-BST across tasks."""
+    for task in ("lin", "cub"):
+        cfg = synth.SynthConfig(dist="normal", variant=0, task=task,
+                                n=3000, seed=1)
+        x, y = synth.generate(cfg)
+        sigma = float(np.std(x))
+        t = qo.init(512, radius=sigma / 2, origin=float(np.mean(x)))
+        t = qo.update(t, jnp.array(x), jnp.array(y))
+        rq = qo.best_split(t)
+
+        e = ebst.init(len(x))
+        e = jax.jit(ebst.update)(e, jnp.array(x), jnp.array(y))
+        re_ = jax.jit(ebst.best_split)(e)
+        assert bool(rq.valid) and bool(re_.valid)
+        assert float(rq.merit) >= 0.85 * float(re_.merit), task
+
+
+def test_qo_batched_equals_streaming(rng):
+    """Folding one batch == folding it in chunks (Chan merge correctness)."""
+    x = rng.normal(0, 2, 1000).astype(np.float32)
+    y = (x ** 2).astype(np.float32)
+    t1 = qo.init(128, radius=0.2)
+    t1 = qo.update(t1, jnp.array(x), jnp.array(y))
+    t2 = qo.init(128, radius=0.2)
+    for i in range(0, 1000, 100):
+        t2 = qo.update(t2, jnp.array(x[i:i + 100]), jnp.array(y[i:i + 100]))
+    for k in ("n", "mean", "m2"):
+        np.testing.assert_allclose(np.asarray(t1["y"][k]), np.asarray(t2["y"][k]),
+                                   rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(t1["sum_x"]), np.asarray(t2["sum_x"]),
+                               rtol=1e-4, atol=1e-3)
+
+
+def test_merge_tables_is_distributed_update(rng):
+    """Two shards merged == one stream (the cross-device reduction)."""
+    x = rng.normal(0, 1, 2000).astype(np.float32)
+    y = np.sin(x).astype(np.float32)
+    full = qo.update(qo.init(128, radius=0.1), jnp.array(x), jnp.array(y))
+    a = qo.update(qo.init(128, radius=0.1), jnp.array(x[:1000]), jnp.array(y[:1000]))
+    b = qo.update(qo.init(128, radius=0.1), jnp.array(x[1000:]), jnp.array(y[1000:]))
+    merged = qo.merge_tables(a, b)
+    for k in ("n", "mean", "m2"):
+        np.testing.assert_allclose(np.asarray(full["y"][k]),
+                                   np.asarray(merged["y"][k]), rtol=2e-3, atol=2e-3)
+    rf, rm = qo.best_split(full), qo.best_split(merged)
+    np.testing.assert_allclose(float(rf.threshold), float(rm.threshold), rtol=1e-4)
+
+
+@given(st.integers(16, 512), st.integers(2, 400), st.integers(0, 10_000))
+@settings(max_examples=30, deadline=None)
+def test_qo_slot_count_bounded(capacity, n, seed):
+    """|H| <= capacity and |H| <= n (the paper's memory claim |H| << n)."""
+    rng = np.random.default_rng(seed)
+    x = rng.normal(0, 1, n).astype(np.float32)
+    t = qo.init(capacity, radius=0.5)
+    t = qo.update(t, jnp.array(x), jnp.array(x))
+    slots = int(qo.n_slots(t))
+    assert 1 <= slots <= min(capacity, n)
+    tot = qo.total_stats(t)
+    assert abs(float(tot["n"]) - n) < 1e-3  # no observation lost
+
+
+def test_empty_and_single_observation():
+    t = qo.init(64, radius=0.1)
+    r = qo.best_split(t)
+    assert not bool(r.valid)
+    t = qo.update(t, jnp.array([1.0]), jnp.array([2.0]))
+    r = qo.best_split(t)
+    assert not bool(r.valid)  # one bin -> no boundary
+
+
+def test_quantization_radius_tradeoff(rng):
+    """Paper §6.1/Fig.3: smaller radius -> more slots & merit closer to
+    E-BST; larger radius -> fewer slots."""
+    x = rng.normal(0, 1, 5000).astype(np.float32)
+    y = np.where(x <= 0.25, 0.0, 4.0).astype(np.float32) + \
+        0.1 * rng.normal(0, 1, 5000).astype(np.float32)
+    merit_exact, _ = exact_best_split(x, y)
+    slots, merits = [], []
+    for r in (1.0, 0.5, 0.1, 0.02):
+        t = qo.update(qo.init(1024, radius=r), jnp.array(x), jnp.array(y))
+        slots.append(int(qo.n_slots(t)))
+        merits.append(float(qo.best_split(t).merit))
+    assert slots == sorted(slots), "smaller radius must give more slots"
+    assert merits[-1] >= 0.98 * merit_exact
+    assert merits[-1] >= merits[0] - 1e-3

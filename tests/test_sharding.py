@@ -1,0 +1,127 @@
+"""Distribution tests on a multi-device (forced-host) mesh.
+
+Run in a subprocess with XLA_FLAGS so the main test process keeps 1 device
+(the assignment forbids setting the flag globally)."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def run_with_devices(code: str, n=8) -> str:
+    env = dict(os.environ,
+               XLA_FLAGS=f"--xla_force_host_platform_device_count={n}",
+               PYTHONPATH=SRC)
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env, timeout=600)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+def test_train_step_agrees_with_single_device():
+    """Same tiny model: 4x2 mesh loss == 1-device loss (SPMD correctness)."""
+    code = """
+    import jax, jax.numpy as jnp, numpy as np
+    from repro import configs
+    from repro.configs import reduced, ShapeConfig
+    from repro.models import layers as L, model as M
+    L.set_compute_dtype(jnp.float32)
+    from repro.train import steps as ST
+    from repro.optim import adamw
+    from repro.train import monitor as MON
+    from repro.launch.mesh import make_local_mesh
+
+    cfg = reduced(configs.get_arch("qwen3-8b"), d_model=64, n_heads=8,
+                  n_kv_heads=4, vocab=256, head_dim=16)
+    shape = ShapeConfig("t", 64, 8, "train")
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (8, 64), 0, 256),
+             "labels": jax.random.randint(jax.random.PRNGKey(2), (8, 64), 0, 256)}
+    losses = {}
+    for dp, tp in ((1, 1), (4, 2)):
+        mesh = make_local_mesh(dp, tp)
+        fn, in_sh, _, _ = ST.build_train_step(cfg, shape, mesh, donate=False)
+        with mesh:
+            params = jax.jit(lambda k: M.init_params(k, cfg),
+                             out_shardings=in_sh[0])(jax.random.PRNGKey(0))
+            opt = jax.jit(adamw.init_state, out_shardings=in_sh[1])(params)
+            _, _, metrics, _ = fn(params, opt, batch, MON.init_monitor())
+            losses[(dp, tp)] = float(metrics["loss"])
+    print("LOSSES", losses[(1, 1)], losses[(4, 2)])
+    assert abs(losses[(1, 1)] - losses[(4, 2)]) < 2e-3, losses
+    """
+    out = run_with_devices(code)
+    assert "LOSSES" in out
+
+
+def test_distributed_sketch_merge_8_devices():
+    """QO tables merged across a real 8-way axis == single-stream table."""
+    code = """
+    import jax, jax.numpy as jnp, numpy as np
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+    from repro.core import qo, sketch
+    mesh = jax.make_mesh((8,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    rng = np.random.default_rng(0)
+    x = rng.normal(0, 1, 8 * 500).astype(np.float32)
+
+    def f(xs):
+        t = qo.update(qo.init(64, radius=0.2), xs, xs)
+        return sketch.all_merge(t, "data")
+
+    out = jax.jit(shard_map(f, mesh=mesh, in_specs=P("data"), out_specs=P(), check_rep=False))(
+        jnp.array(x))
+    ref = qo.update(qo.init(64, radius=0.2), jnp.array(x), jnp.array(x))
+    np.testing.assert_allclose(np.asarray(out["y"]["n"]),
+                               np.asarray(ref["y"]["n"]), atol=1e-3)
+    np.testing.assert_allclose(np.asarray(out["y"]["mean"]),
+                               np.asarray(ref["y"]["mean"]), rtol=1e-3, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(out["y"]["m2"]),
+                               np.asarray(ref["y"]["m2"]), rtol=5e-3, atol=5e-3)
+    print("MERGE OK")
+    """
+    out = run_with_devices(code)
+    assert "MERGE OK" in out
+
+
+def test_int8_quantized_psum_8_devices():
+    code = """
+    import jax, jax.numpy as jnp, numpy as np
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+    from repro.optim import compress
+    mesh = jax.make_mesh((8,), ("pod",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    rng = np.random.default_rng(0)
+    g = rng.normal(0, 0.1, (8, 128)).astype(np.float32)
+
+    out = jax.jit(shard_map(
+        lambda x: compress.quantized_psum({"g": x[0]}, "pod")["g"],
+        mesh=mesh, in_specs=P("pod"), out_specs=P(), check_rep=False))(jnp.array(g))
+    ref = g.sum(0)
+    err = np.abs(np.asarray(out) - ref).max()
+    scale = np.abs(g).max() / 127 * 8
+    assert err <= scale + 1e-6, (err, scale)
+    print("PSUM OK", err)
+    """
+    out = run_with_devices(code)
+    assert "PSUM OK" in out
+
+
+def test_dryrun_entrypoint_single_cell():
+    """The real dryrun module compiles one cell end-to-end (512 devices)."""
+    env = dict(os.environ, PYTHONPATH=SRC)
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch",
+         "phi3-mini-3.8b", "--shape", "decode_32k", "--out",
+         "/tmp/dryrun_test.json"],
+        capture_output=True, text=True, env=env, timeout=600)
+    assert out.returncode == 0, out.stderr[-3000:]
+    res = json.load(open("/tmp/dryrun_test.json"))
+    assert res[0]["status"] == "ok"
+    assert res[0]["chips"] == 256

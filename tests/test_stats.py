@@ -1,0 +1,119 @@
+"""Property tests for the robust variance algebra (paper §3, Eqs. 2-7)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import stats
+
+finite_arrays = st.lists(
+    st.floats(-1e4, 1e4, allow_nan=False, width=32), min_size=1, max_size=200)
+
+
+def np_stats(y):
+    y = np.asarray(y, np.float64)
+    return len(y), y.mean(), ((y - y.mean()) ** 2).sum()
+
+
+def close(a, b, tol=1e-3):
+    return np.isclose(a, b, rtol=tol, atol=tol * 10)
+
+
+@given(finite_arrays)
+@settings(max_examples=100, deadline=None)
+def test_observe_matches_numpy(ys):
+    s = stats.init()
+    for y in ys:
+        s = stats.observe(s, y)
+    n, mean, m2 = np_stats(ys)
+    assert close(float(s["n"]), n)
+    scale = max(1.0, abs(mean))
+    assert abs(float(s["mean"]) - mean) / scale < 1e-3
+    scale2 = max(1.0, m2)
+    assert abs(float(s["m2"]) - m2) / scale2 < 1e-2
+
+
+@given(finite_arrays, finite_arrays)
+@settings(max_examples=100, deadline=None)
+def test_merge_is_exact_concatenation(a, b):
+    """merge(stats(A), stats(B)) == stats(A ++ B)  (paper Eqs. 4-5)."""
+    sa = stats.from_batch(jnp.array(a, jnp.float32))
+    sb = stats.from_batch(jnp.array(b, jnp.float32))
+    m = stats.merge(sa, sb)
+    n, mean, m2 = np_stats(a + b)
+    assert close(float(m["n"]), n)
+    assert abs(float(m["mean"]) - mean) / max(1.0, abs(mean)) < 1e-3
+    assert abs(float(m["m2"]) - m2) / max(1.0, m2) < 1e-2
+
+
+@given(finite_arrays, finite_arrays)
+@settings(max_examples=100, deadline=None)
+def test_subtract_inverts_merge(a, b):
+    """subtract(merge(A,B), B) == A  (paper Eqs. 6-7 — the new result)."""
+    sa = stats.from_batch(jnp.array(a, jnp.float32))
+    sb = stats.from_batch(jnp.array(b, jnp.float32))
+    sab = stats.merge(sa, sb)
+    rec = stats.subtract(sab, sb)
+    assert close(float(rec["n"]), float(sa["n"]))
+    # the subtraction cancels against the MERGED statistics, so float32
+    # error scales with |AB|, not |A| (inherent to Eqs. 6-7)
+    mscale = max(1.0, abs(float(sa["mean"])), 1e-4 * abs(float(sab["mean"])))
+    assert abs(float(rec["mean"]) - float(sa["mean"])) / mscale < 5e-3
+    scale2 = max(1.0, float(sa["m2"]), 1e-4 * float(sab["m2"]))
+    assert abs(float(rec["m2"]) - float(sa["m2"])) / scale2 < 5e-2
+
+
+@given(finite_arrays)
+@settings(max_examples=50, deadline=None)
+def test_merge_associative_commutative(ys):
+    """The merge operator is a legal reduction: order must not matter."""
+    third = max(1, len(ys) // 3)
+    parts = [ys[:third], ys[third:2 * third], ys[2 * third:]]
+    parts = [p for p in parts if p]
+    ss = [stats.from_batch(jnp.array(p, jnp.float32)) for p in parts]
+    import functools
+    left = functools.reduce(stats.merge, ss)
+    right = functools.reduce(stats.merge, ss[::-1])
+    assert close(float(left["n"]), float(right["n"]))
+    assert close(float(left["mean"]), float(right["mean"]), 1e-3)
+    assert abs(float(left["m2"]) - float(right["m2"])) / max(1.0, float(left["m2"])) < 1e-2
+
+
+def test_merge_identity():
+    s = stats.from_batch(jnp.arange(10.0))
+    z = stats.init()
+    m = stats.merge(s, z)
+    for k in s:
+        np.testing.assert_allclose(np.asarray(m[k]), np.asarray(s[k]), rtol=1e-6)
+
+
+def test_welford_beats_naive_on_cancellation():
+    """The paper's motivation: naive sum-of-squares cancels at large mean."""
+    rng = np.random.default_rng(0)
+    y = (1e6 + 0.1 * rng.normal(0, 1, 4000)).astype(np.float32)
+    s = stats.init()
+    bs = 100
+    for i in range(0, len(y), bs):
+        tile = stats.from_batch(jnp.array(y[i:i + bs]))
+        s = stats.merge(s, tile)
+    robust = float(stats.variance(s))
+    # naive float32 accumulation
+    sy = np.float32(0); syy = np.float32(0)
+    for v in y:
+        sy += v; syy += v * v
+    naive = (syy - sy * sy / len(y)) / (len(y) - 1)
+    truth = np.var(y.astype(np.float64), ddof=1)
+    assert abs(robust - truth) / truth < 0.05
+    assert abs(naive - truth) > abs(robust - truth)  # robust strictly better
+
+
+def test_tree_reduce_merge_matches_sequential():
+    rng = np.random.default_rng(1)
+    ys = rng.normal(3, 2, (16, 50)).astype(np.float32)
+    stacked = stats.from_batch(jnp.array(ys), axis=1)
+    red = stats.tree_reduce_merge(stacked, axis=0)
+    n, mean, m2 = np_stats(ys.reshape(-1))
+    assert close(float(red["n"]), n)
+    assert close(float(red["mean"]), mean, 1e-3)
+    assert abs(float(red["m2"]) - m2) / m2 < 1e-2

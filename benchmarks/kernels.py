@@ -1,9 +1,11 @@
 """Kernel micro-benchmarks.
 
 On CPU the Pallas kernels run under interpret=True (a Python interpreter —
-its wall time is meaningless), so we time the jnp reference path (what the
-kernel computes) and report the kernel/oracle agreement + the analytic
-VMEM/MXU utilization of the kernel's tiling for the TPU target."""
+its wall time is meaningless), so we time the dispatchable backends (the
+jnp lowering the tree actually runs off-TPU, and the seed reference it
+replaces), report kernel/oracle agreement from a small interpret-mode
+probe, and the analytic VMEM footprint of the kernels' tiling for the TPU
+target."""
 from __future__ import annotations
 
 import time
@@ -12,9 +14,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import qo
-from repro.kernels import ops
+from repro.core import qo, stats
+from repro.kernels import ops, ref
 from repro.kernels.qo_update import TABLE_ROWS
+from repro.kernels.qo_update_leaves import FOREST_ROWS, round_up
 
 
 def _time(f, *args, iters=20):
@@ -27,9 +30,7 @@ def _time(f, *args, iters=20):
     return (time.perf_counter() - t0) / iters
 
 
-def run(out=None):
-    rng = np.random.default_rng(0)
-    report = {}
+def _single_table(report, rng):
     for cap, n in ((128, 100_000), (256, 1_000_000)):
         x = jnp.array(rng.normal(0, 1, n).astype(np.float32))
         y = jnp.array(rng.normal(0, 1, n).astype(np.float32))
@@ -53,4 +54,61 @@ def run(out=None):
             "kernel_tile_vmem_bytes": vmem_bytes,
             "kernel_vmem_fits_16MB": vmem_bytes < 16 * 2 ** 20,
         }
+
+
+def _forest(report, rng):
+    """Forest-scale ops: every (leaf, feature) table of a tree at once."""
+    for M, F, C, B in ((63, 4, 48, 256), (255, 8, 64, 1024)):
+        ao_y = stats.init((M, F, C))
+        ao_sum_x = jnp.zeros((M, F, C))
+        ao_radius = jnp.full((M, F), 0.1, jnp.float32)
+        ao_origin = jnp.zeros((M, F), jnp.float32)
+        leaf = jnp.array(rng.integers(0, M, B), jnp.int32)
+        X = jnp.array(rng.normal(0, 1, (B, F)).astype(np.float32))
+        y = jnp.array(rng.normal(0, 1, B).astype(np.float32))
+        attempt = jnp.ones((M,), bool)
+
+        upd = jax.jit(lambda *a: ops.forest_update(*a, backend="jnp"))
+        dt = _time(upd, ao_y, ao_sum_x, ao_radius, ao_origin, leaf, X, y)
+        ao_y2, ao_sum_x2 = upd(ao_y, ao_sum_x, ao_radius, ao_origin,
+                               leaf, X, y)
+        qry = jax.jit(lambda *a: ops.forest_best_splits(*a, backend="jnp"))
+        qt = _time(qry, ao_y2, ao_sum_x2, ao_radius, ao_origin, attempt)
+        # the seed reference engine it replaces (vmap of per-table scans)
+        qry_ref = jax.jit(ref.forest_query_ref)
+        qt_ref = _time(qry_ref, ao_y2, ao_sum_x2, attempt)
+
+        # interpret-mode agreement probe (small slice: interpreter is slow;
+        # cross-checks the two THIS-repo backends against each other — the
+        # per-table core.qo oracle comparison lives in tests/test_qo_batched)
+        ky, _ = ops.forest_update(ao_y, ao_sum_x, ao_radius, ao_origin,
+                                  leaf[:64], X[:64], y[:64],
+                                  backend="interpret")
+        ry, _ = ops.forest_update(ao_y, ao_sum_x, ao_radius, ao_origin,
+                                  leaf[:64], X[:64], y[:64], backend="jnp")
+        agree = float(jnp.max(jnp.abs(ky["n"] - ry["n"])))
+
+        # analytic VMEM per grid step of qo_update_leaves (tile_m x Cp slabs)
+        tile_m, tile_b = min(128, round_up(M, 8)), min(256, B)
+        Cp = round_up(C, 128)
+        vmem = (4 * tile_b                        # leaf/x/y/w tiles
+                + 2 * FOREST_ROWS * tile_m * Cp   # in + out table slabs
+                + tile_b * tile_m + 2 * tile_b * Cp) * 4  # one-hots
+        report[f"forest_M{M}_F{F}_C{C}_B{B}"] = {
+            "observe_ns_per_elem": dt / B * 1e9,
+            "update_us": dt * 1e6,
+            "query_us": qt * 1e6,
+            "query_ref_us": qt_ref * 1e6,
+            "query_speedup_vs_ref": qt_ref / qt,
+            "interpret_vs_jnp_max_abs_n_diff": agree,
+            "kernel_tile_vmem_bytes": vmem,
+            "kernel_vmem_fits_16MB": vmem < 16 * 2 ** 20,
+        }
+
+
+def run(out=None):
+    rng = np.random.default_rng(0)
+    report = {}
+    _single_table(report, rng)
+    _forest(report, rng)
     return report

@@ -19,6 +19,19 @@ L.set_compute_dtype(jnp.float32)  # CPU container cannot execute bf16 dots
 
 from benchmarks import aos, kernels, roofline, tree  # noqa: E402
 
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _write_bench(filename: str, rows) -> None:
+    """Stable perf-trajectory artifact at the repo root.
+
+    Fixed-seed benchmark rows, schema [{name, us_per_call, derived}, ...]
+    — one file per bench family so successive PRs can diff throughput."""
+    payload = [{"name": n, "us_per_call": round(float(us), 3), "derived": d}
+               for n, us, d in rows]
+    with open(os.path.join(REPO_ROOT, filename), "w") as f:
+        json.dump(payload, f, indent=1)
+
 
 def main() -> None:
     ap = argparse.ArgumentParser()
@@ -52,15 +65,27 @@ def main() -> None:
     # --- tree-level e2e (paper §7 future work, implemented) --------------
     trep = tree.run()
     report["tree"] = trep
-    csv.append(("hoeffding_tree_update", 1e6 / trep["instances_per_s"],
-                f"mse_ratio={trep['mse_ratio']:.4f}"))
+    tree_rows = [
+        ("hoeffding_tree_update", 1e6 / trep["kernel"]["instances_per_s"],
+         f"mse_ratio={trep['kernel']['mse_ratio']:.4f}"
+         f" speedup_vs_oracle={trep['kernel_speedup_vs_oracle']:.3f}"
+         f" mse_rel_diff={trep['mse_rel_diff_vs_oracle']:.5f}"),
+        ("hoeffding_tree_update_oracle",
+         1e6 / trep["oracle"]["instances_per_s"],
+         f"mse_ratio={trep['oracle']['mse_ratio']:.4f}"),
+    ]
+    csv.extend(tree_rows)
+    _write_bench("BENCH_tree.json", tree_rows)
 
     # --- kernel micro-benches ---------------------------------------------
     krep = kernels.run()
     report["kernels"] = krep
+    kernel_rows = []
     for name, k in krep.items():
-        csv.append((f"kernel_{name}", k["observe_ns_per_elem"] / 1e3,
-                    f"query_us={k['query_us']:.1f}"))
+        kernel_rows.append((f"kernel_{name}", k["observe_ns_per_elem"] / 1e3,
+                            f"query_us={k['query_us']:.1f}"))
+    csv.extend(kernel_rows)
+    _write_bench("BENCH_kernels.json", kernel_rows)
 
     # --- roofline summary from the dry-run ---------------------------------
     try:

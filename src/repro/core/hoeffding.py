@@ -2,20 +2,29 @@
 
 The paper's stated destination for QO (§1, §7): FIMT-style Hoeffding tree
 regression where every leaf carries one Attribute Observer per numeric
-feature.  Here the whole tree is a fixed-capacity array structure so that
+feature.  Here the whole tree is a fixed-capacity array structure and the
+hot path is three explicit stages (DESIGN.md §2.3):
 
-* routing a batch of instances is a vectorized gather loop (depth-bounded),
-* all (leaf × feature) QO tables update with ONE fused segment-reduction,
-* split attempts evaluate every leaf and feature simultaneously and can
-  expand several leaves per attempt,
+* **route**   — leaf index per batch row, a depth-bounded vectorized gather
+  loop;
+* **absorb**  — ALL (leaf x feature) QO tables update in one fused pass
+  through :func:`repro.kernels.ops.forest_update` (a Pallas kernel on TPU,
+  an XLA-fused segment-reduction elsewhere);
+* **attempt** — split candidates for every table evaluate simultaneously
+  through :func:`repro.kernels.ops.forest_best_splits`, gated so the work
+  only runs when some leaf passed its grace period AND capacity remains.
 
-which is the TPU-native re-think of the per-instance pointer algorithm
-(DESIGN.md §2).  Growth follows FIRT/FIMT: a leaf splits when the ratio of
-the second-best to best Variance Reduction drops below ``1 - eps`` with
+``HTRConfig.split_backend`` selects the engine: ``"auto"`` dispatches to
+the compiled kernels on TPU and the fused-jnp lowering elsewhere;
+``"oracle"`` keeps the original per-stat segment-scatter + per-table scan
+path as the correctness reference (benchmarks/tree.py times both head to
+head).  Growth follows FIRT/FIMT: a leaf splits when the ratio of the
+second-best to best Variance Reduction drops below ``1 - eps`` with
 ``eps = sqrt(ln(1/delta) / (2 n))`` (Hoeffding bound, R = 1 for the ratio),
 or when ``eps < tau`` (tie break).
 
-Functional API: ``init_state`` -> ``update`` (learn a batch) -> ``predict``.
+Functional API: ``init_state`` -> ``update`` (learn a batch) -> ``predict``;
+``update_stream`` scans a whole stream through ``update`` in one dispatch.
 Forests: ``jax.vmap`` over a leading axis of states.
 """
 from __future__ import annotations
@@ -28,11 +37,13 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import stats
-from repro.core import qo as qo_lib
+from repro.kernels import ops as kops
+from repro.kernels import ref as kref
 
 TreeState = Dict[str, jax.Array]
 
-__all__ = ["HTRConfig", "init_state", "update", "predict", "n_leaves", "depth_histogram"]
+__all__ = ["HTRConfig", "init_state", "update", "update_stream", "predict",
+           "n_leaves", "depth_histogram"]
 
 
 @dataclass(frozen=True)
@@ -46,6 +57,7 @@ class HTRConfig:
     max_depth: int = 12
     r0: float = 0.05              # cold-start quantization radius (paper §5.2)
     sigma_k: float = 2.0          # dynamic radius r = sigma / k for children
+    split_backend: str = "auto"   # auto | pallas | interpret | jnp | oracle
 
 
 def init_state(cfg: HTRConfig) -> TreeState:
@@ -85,148 +97,279 @@ def predict(cfg: HTRConfig, state: TreeState, X: jax.Array) -> jax.Array:
     return state["ystats"]["mean"][leaf]
 
 
-def _ao_bin_ids(state: TreeState, leaf, X, C):
-    """(B, F) bin ids in each row's leaf tables."""
-    r = state["ao_radius"][leaf]        # (B, F)
-    o = state["ao_origin"][leaf]        # (B, F)
-    h = jnp.floor((X - o) / r).astype(jnp.int32) + C // 2
-    return jnp.clip(h, 0, C - 1)
-
-
 def _segment_stats(vals_y, seg, num):
-    """Exact per-segment (n, mean, M2) from a flat batch."""
+    """Exact per-segment (n, mean, M2) from a flat batch.
+
+    M2 uses the two-pass residual form (residuals against the segment
+    mean, gathered back per element) — the same robust formulation as
+    :func:`repro.core.qo.update`, not the cancellation-prone
+    ``sum(y^2) - n*mean^2`` (paper §3).
+    """
     w = jnp.ones_like(vals_y)
     n = jax.ops.segment_sum(w, seg, num)
     sy = jax.ops.segment_sum(vals_y, seg, num)
-    syy = jax.ops.segment_sum(vals_y * vals_y, seg, num)
     safe = jnp.where(n > 0, n, 1.0)
-    mean = sy / safe
-    m2 = jnp.maximum(syy - n * mean * mean, 0.0)
-    return {"n": n, "mean": jnp.where(n > 0, mean, 0.0), "m2": m2}
+    mean = jnp.where(n > 0, sy / safe, 0.0)
+    m2 = jax.ops.segment_sum((vals_y - mean[seg]) ** 2, seg, num)
+    return {"n": n, "mean": mean, "m2": jnp.where(n > 0, m2, 0.0)}
 
 
-def update(cfg: HTRConfig, state: TreeState, X: jax.Array, y: jax.Array) -> TreeState:
-    """Learn one batch: route, absorb statistics, attempt splits."""
+# --------------------------------------------------------------------------
+# absorb stage
+# --------------------------------------------------------------------------
+
+def _absorb_oracle(cfg: HTRConfig, state: TreeState, leaf, X, y) -> TreeState:
+    """Seed path: four segment-scatter reductions over the flat M*F*C space
+    (kept as the correctness oracle for :func:`kernels.ops.forest_update`)."""
     M, F, C = cfg.max_nodes, cfg.n_features, cfg.n_bins
-    X = jnp.asarray(X, jnp.float32)
-    y = jnp.asarray(y, jnp.float32).reshape(-1)
-    B = y.shape[0]
-
-    leaf = _route(state, X, cfg.max_depth)                      # (B,)
-
-    # --- leaf target statistics (predictor + split-variance source) ------
-    batch_leaf = _segment_stats(y, leaf, M)
-    state = dict(state, ystats=stats.merge(state["ystats"], batch_leaf))
-
-    # --- one fused QO update for every (leaf, feature) table -------------
-    bins = _ao_bin_ids(state, leaf, X, C)                       # (B, F)
+    bins = kops.forest_bin_ids(state["ao_radius"], state["ao_origin"],
+                               leaf, X, C)
     seg = (leaf[:, None] * F + jnp.arange(F)[None, :]) * C + bins
-    seg = seg.reshape(-1)                                       # (B*F,)
+    seg = seg.reshape(-1)
     y_rep = jnp.repeat(y, F)
     x_flat = X.reshape(-1)
     tile = _segment_stats(y_rep, seg, M * F * C)
     tile = jax.tree.map(lambda a: a.reshape(M, F, C), tile)
     sum_x = jax.ops.segment_sum(x_flat, seg, M * F * C).reshape(M, F, C)
-    state = dict(
-        state,
-        ao_y=stats.merge(state["ao_y"], tile),
-        ao_sum_x=state["ao_sum_x"] + sum_x,
-        seen=state["seen"] + batch_leaf["n"],
-    )
+    return dict(state,
+                ao_y=stats.merge(state["ao_y"], tile),
+                ao_sum_x=state["ao_sum_x"] + sum_x)
 
-    # --- split attempts ---------------------------------------------------
+
+def _absorb(cfg: HTRConfig, state: TreeState, leaf, X, y) -> TreeState:
+    if cfg.split_backend == "oracle":
+        return _absorb_oracle(cfg, state, leaf, X, y)
+    ao_y, ao_sum_x = kops.forest_update(
+        state["ao_y"], state["ao_sum_x"], state["ao_radius"],
+        state["ao_origin"], leaf, X, y, backend=cfg.split_backend)
+    return dict(state, ao_y=ao_y, ao_sum_x=ao_sum_x)
+
+
+# --------------------------------------------------------------------------
+# attempt stage
+# --------------------------------------------------------------------------
+
+def _query_oracle(state: TreeState, attempt) -> Tuple[jax.Array, jax.Array]:
+    """Seed path: vmap(vmap(best_split)) over every (leaf, feature) table."""
+    return kref.forest_query_ref(state["ao_y"], state["ao_sum_x"], attempt)
+
+
+def _split_decision(cfg: HTRConfig, state: TreeState, merit, thr_all, attempt):
+    """Hoeffding-bound ratio test + vectorized child allocation.
+
+    Shared by both attempt engines so the decision math can never
+    desynchronize between the kernel pipeline and the oracle reference.
+    Returns (best_f, best_c, can, lidx, c0, c1, c0i, c1i); index M means
+    'dropped scatter'.
+    """
+    M = cfg.max_nodes
+    top2 = jax.lax.top_k(merit, 2)[0]                       # (M, 2)
+    best_f = jnp.argmax(merit, axis=1)                      # (M,)
+    best_c = thr_all[jnp.arange(M), best_f]
+    vr1, vr2 = top2[:, 0], top2[:, 1]
+    n_leaf = jnp.maximum(state["ystats"]["n"], 1.0)
+    eps = jnp.sqrt(jnp.log(1.0 / cfg.delta) / (2.0 * n_leaf))
+    ratio = jnp.where(vr1 > 0, jnp.maximum(vr2, 0.0) / vr1, 1.0)
+    decide = (ratio < 1.0 - eps) | (eps < cfg.tau)
+    want = attempt & decide & jnp.isfinite(vr1) & (vr1 > 0)
+
+    # vectorized allocation of 2 children per splitting leaf
+    k = jnp.cumsum(want.astype(jnp.int32)) - 1
+    base = state["n_nodes"] + 2 * k
+    can = want & (base + 1 < M)
+    lidx = jnp.where(can, jnp.arange(M), M)
+    c0, c1 = base, base + 1
+    c0i = jnp.where(can, c0, M)
+    c1i = jnp.where(can, c1, M)
+    return best_f, best_c, can, lidx, c0, c1, c0i, c1i
+
+
+def _child_radius(cfg: HTRConfig, state: TreeState):
+    """Dynamic child radius r = sigma_x / k and origin from the parent's
+    per-feature x distribution estimated off the QO bins (paper §5.2)."""
+    occ = state["ao_y"]["n"]                                  # (M, F, C)
+    nb = jnp.maximum(occ, 1.0)
+    proto = jnp.where(occ > 0, state["ao_sum_x"] / nb, 0.0)
+    n_f = occ.sum(-1)
+    mean_x = (occ * proto).sum(-1) / jnp.maximum(n_f, 1.0)
+    var_x = (occ * (proto - mean_x[..., None]) ** 2).sum(-1) \
+        / jnp.maximum(n_f - 1.0, 1.0)
+    sigma = jnp.sqrt(jnp.maximum(var_x, 1e-12))               # (M, F)
+    child_r = jnp.maximum(sigma / cfg.sigma_k, 1e-6)
+    return child_r, mean_x
+
+
+def _do_attempts_oracle(cfg: HTRConfig, state: TreeState, attempt) -> TreeState:
+    """The seed engine, preserved as the correctness reference: per-table
+    scans, log-depth merge/subtract child recovery, one scatter per field.
+    benchmarks/tree.py races it against :func:`_do_attempts`."""
+    M = cfg.max_nodes
+    merit, thr_all = _query_oracle(state, attempt)
+    best_f, best_c, can, lidx, c0, c1, c0i, c1i = _split_decision(
+        cfg, state, merit, thr_all, attempt)
+
+    st = dict(state)
+    st["feature"] = st["feature"].at[lidx].set(best_f, mode="drop")
+    st["threshold"] = st["threshold"].at[lidx].set(best_c, mode="drop")
+    st["child"] = st["child"].at[lidx, 0].set(c0, mode="drop")
+    st["child"] = st["child"].at[lidx, 1].set(c1, mode="drop")
+    st["is_leaf"] = st["is_leaf"].at[lidx].set(False, mode="drop")
+    st["seen"] = st["seen"].at[lidx].set(0.0, mode="drop")
+
+    child_depth = state["depth"] + 1
+    for ci in (c0i, c1i):
+        st["is_leaf"] = st["is_leaf"].at[ci].set(True, mode="drop")
+        st["depth"] = st["depth"].at[ci].set(child_depth, mode="drop")
+        st["child"] = st["child"].at[ci].set(-1, mode="drop")
+        st["seen"] = st["seen"].at[ci].set(0.0, mode="drop")
+
+    idxM = jnp.arange(M)
+    bins_f = jax.tree.map(lambda a: a[idxM, best_f], state["ao_y"])
+    sumx_f = state["ao_sum_x"][idxM, best_f]
+    occ_f = bins_f["n"] > 0
+    proto_f = jnp.where(occ_f, sumx_f / jnp.where(occ_f, bins_f["n"], 1.0),
+                        jnp.inf)
+    maskL = occ_f & (proto_f <= best_c[:, None])
+    left = stats.tree_reduce_merge(
+        jax.tree.map(lambda a: jnp.where(maskL, a, 0.0), bins_f), axis=1)
+    total_b = stats.tree_reduce_merge(bins_f, axis=1)
+    right = stats.subtract(total_b, left)
+    st["ystats"] = jax.tree.map(
+        lambda a, v: a.at[c0i].set(v, mode="drop"), st["ystats"], left)
+    st["ystats"] = jax.tree.map(
+        lambda a, v: a.at[c1i].set(v, mode="drop"), st["ystats"], right)
+
+    child_r, mean_x = _child_radius(cfg, state)
+    for ci in (c0i, c1i):
+        st["ao_radius"] = st["ao_radius"].at[ci].set(child_r, mode="drop")
+        st["ao_origin"] = st["ao_origin"].at[ci].set(mean_x, mode="drop")
+        st["ao_sum_x"] = st["ao_sum_x"].at[ci].set(0.0, mode="drop")
+        st["ao_y"] = jax.tree.map(
+            lambda a: a.at[ci].set(0.0, mode="drop"), st["ao_y"])
+
+    st["n_nodes"] = state["n_nodes"] + 2 * jnp.sum(can.astype(jnp.int32))
+    st["seen"] = jnp.where(attempt & ~can, 0.0, st["seen"])
+    return st
+
+
+def _do_attempts(cfg: HTRConfig, state: TreeState, attempt) -> TreeState:
+    M = cfg.max_nodes
+    merit, thr_all = kops.forest_best_splits(
+        state["ao_y"], state["ao_sum_x"], state["ao_radius"],
+        state["ao_origin"], attempt, backend=cfg.split_backend)
+    best_f, best_c, can, lidx, c0, c1, c0i, c1i = _split_decision(
+        cfg, state, merit, thr_all, attempt)
+    kids = jnp.concatenate([c0i, c1i])             # (2M,) fused child scatter
+
+    st = dict(state)
+    st["feature"] = st["feature"].at[lidx].set(best_f, mode="drop")
+    st["threshold"] = st["threshold"].at[lidx].set(best_c, mode="drop")
+    st["child"] = st["child"].at[lidx].set(jnp.stack([c0, c1], 1), mode="drop")
+    st["child"] = st["child"].at[kids].set(-1, mode="drop")
+    st["is_leaf"] = st["is_leaf"].at[lidx].set(False, mode="drop") \
+                                 .at[kids].set(True, mode="drop")
+    st["seen"] = st["seen"].at[jnp.concatenate([lidx, kids])].set(
+        0.0, mode="drop")
+    st["depth"] = st["depth"].at[kids].set(jnp.tile(state["depth"] + 1, 2),
+                                           mode="drop")
+
+    # children INHERIT the split halves' target statistics, recovered from
+    # the winning feature's QO bins with the paper's grouped two-pass form
+    # (Eqs. 6-7 algebra, exact) — fresh leaves predict sensibly from step one
+    idxM = jnp.arange(M)
+    bins_f = jax.tree.map(lambda a: a[idxM, best_f], state["ao_y"])  # (M, C)
+    sumx_f = state["ao_sum_x"][idxM, best_f]
+    occ_f = bins_f["n"] > 0
+    proto_f = jnp.where(occ_f, sumx_f / jnp.where(occ_f, bins_f["n"], 1.0),
+                        jnp.inf)
+    maskL = (occ_f & (proto_f <= best_c[:, None])).astype(jnp.float32)
+    maskR = occ_f.astype(jnp.float32) - maskL
+    nw = bins_f["n"]
+    syw = nw * bins_f["mean"]
+
+    def side(mask):
+        nn = (mask * nw).sum(-1)
+        sy = (mask * syw).sum(-1)
+        mean = jnp.where(nn > 0, sy / jnp.where(nn > 0, nn, 1.0), 0.0)
+        m2 = (mask * bins_f["m2"]).sum(-1) + \
+            (mask * nw * (bins_f["mean"] - mean[:, None]) ** 2).sum(-1)
+        return {"n": nn, "mean": mean, "m2": jnp.where(nn > 0, m2, 0.0)}
+
+    left, right = side(maskL), side(maskR)
+    st["ystats"] = jax.tree.map(
+        lambda a, l, r: a.at[kids].set(jnp.concatenate([l, r]), mode="drop"),
+        st["ystats"], left, right)
+
+    child_r, mean_x = _child_radius(cfg, state)
+    st["ao_radius"] = st["ao_radius"].at[kids].set(
+        jnp.tile(child_r, (2, 1)), mode="drop")
+    st["ao_origin"] = st["ao_origin"].at[kids].set(
+        jnp.tile(mean_x, (2, 1)), mode="drop")
+    st["ao_sum_x"] = st["ao_sum_x"].at[kids].set(0.0, mode="drop")
+    st["ao_y"] = jax.tree.map(
+        lambda a: a.at[kids].set(0.0, mode="drop"), st["ao_y"])
+
+    st["n_nodes"] = state["n_nodes"] + 2 * jnp.sum(can.astype(jnp.int32))
+    # failed attempts still reset the grace counter
+    st["seen"] = jnp.where(attempt & ~can, 0.0, st["seen"])
+    return st
+
+
+# --------------------------------------------------------------------------
+# update = route -> absorb -> attempt
+# --------------------------------------------------------------------------
+
+def update(cfg: HTRConfig, state: TreeState, X: jax.Array,
+           y: jax.Array) -> TreeState:
+    """Learn one batch: route, absorb statistics, attempt splits."""
+    M = cfg.max_nodes
+    X = jnp.asarray(X, jnp.float32)
+    y = jnp.asarray(y, jnp.float32).reshape(-1)
+
+    leaf = _route(state, X, cfg.max_depth)                      # (B,)
+
+    # --- leaf target statistics (predictor + split-variance source) ------
+    batch_leaf = _segment_stats(y, leaf, M)
+    state = dict(state,
+                 ystats=stats.merge(state["ystats"], batch_leaf),
+                 seen=state["seen"] + batch_leaf["n"])
+
+    # --- absorb: one fused QO update for every (leaf, feature) table -----
+    state = _absorb(cfg, state, leaf, X, y)
+
+    # --- attempt ----------------------------------------------------------
     attempt = state["is_leaf"] & (state["seen"] >= cfg.grace_period) \
         & (state["depth"] < cfg.max_depth)
+    if cfg.split_backend == "oracle":
+        do = _do_attempts_oracle
+    else:
+        # capacity gate, part of the batched attempt mask: a full tree can
+        # never split, so skipping the query is free and the learned tree
+        # is bit-identical
+        attempt = attempt & (state["n_nodes"] + 1 < M)
+        do = _do_attempts
 
-    def do_attempts(state):
-        table = {
-            "radius": state["ao_radius"],     # (M, F) — broadcast leaves
-            "origin": state["ao_origin"],
-            "sum_x": state["ao_sum_x"],       # (M, F, C)
-            "y": state["ao_y"],
-        }
-        split = jax.vmap(jax.vmap(
-            lambda r, o, sx, yb: qo_lib.best_split(
-                {"radius": r, "origin": o, "sum_x": sx, "y": yb})))(
-            table["radius"], table["origin"], table["sum_x"], table["y"])
-        merit = jnp.where(split.valid, split.merit, -jnp.inf)   # (M, F)
+    return jax.lax.cond(attempt.any(), functools.partial(do, cfg),
+                        lambda s, a: dict(s), state, attempt)
 
-        top2 = jax.lax.top_k(merit, 2)[0]                       # (M, 2)
-        best_f = jnp.argmax(merit, axis=1)                      # (M,)
-        best_c = split.threshold[jnp.arange(M), best_f]
-        vr1, vr2 = top2[:, 0], top2[:, 1]
-        n_leaf = jnp.maximum(state["ystats"]["n"], 1.0)
-        eps = jnp.sqrt(jnp.log(1.0 / cfg.delta) / (2.0 * n_leaf))
-        ratio = jnp.where(vr1 > 0, jnp.maximum(vr2, 0.0) / vr1, 1.0)
-        decide = (ratio < 1.0 - eps) | (eps < cfg.tau)
-        want = attempt & decide & jnp.isfinite(vr1) & (vr1 > 0)
 
-        # vectorized allocation of 2 children per splitting leaf
-        k = jnp.cumsum(want.astype(jnp.int32)) - 1
-        base = state["n_nodes"] + 2 * k
-        can = want & (base + 1 < M)
-        lidx = jnp.where(can, jnp.arange(M), M)        # M = dropped scatter
-        c0, c1 = base, base + 1
-        c0i = jnp.where(can, c0, M)
-        c1i = jnp.where(can, c1, M)
+@functools.partial(jax.jit, static_argnames=("cfg", "batch_size"))
+def update_stream(cfg: HTRConfig, state: TreeState, X: jax.Array,
+                  y: jax.Array, batch_size: int = 256) -> TreeState:
+    """Scan a whole stream through ``update`` in ONE dispatch.
 
-        st = dict(state)
-        st["feature"] = st["feature"].at[lidx].set(best_f, mode="drop")
-        st["threshold"] = st["threshold"].at[lidx].set(best_c, mode="drop")
-        st["child"] = st["child"].at[lidx, 0].set(c0, mode="drop")
-        st["child"] = st["child"].at[lidx, 1].set(c1, mode="drop")
-        st["is_leaf"] = st["is_leaf"].at[lidx].set(False, mode="drop")
-        st["seen"] = st["seen"].at[lidx].set(0.0, mode="drop")
+    Rows beyond the last full batch are dropped (matching a bounded-batch
+    streaming consumer); call ``update`` directly for the remainder.
+    """
+    n = (X.shape[0] // batch_size) * batch_size
+    Xc = X[:n].reshape(-1, batch_size, X.shape[1])
+    yc = y.reshape(-1)[:n].reshape(-1, batch_size)
 
-        child_depth = state["depth"] + 1
-        for ci in (c0i, c1i):
-            st["is_leaf"] = st["is_leaf"].at[ci].set(True, mode="drop")
-            st["depth"] = st["depth"].at[ci].set(child_depth, mode="drop")
-            st["child"] = st["child"].at[ci].set(-1, mode="drop")
-            st["seen"] = st["seen"].at[ci].set(0.0, mode="drop")
+    def body(s, xy):
+        return update(cfg, s, xy[0], xy[1]), None
 
-        # children INHERIT the split halves' target statistics, recovered
-        # from the winning feature's QO bins with the paper's subtraction
-        # (Eqs. 6-7) — fresh leaves predict sensibly from step one
-        idxM = jnp.arange(M)
-        bins_f = jax.tree.map(lambda a: a[idxM, best_f], state["ao_y"])  # (M,C)
-        sumx_f = state["ao_sum_x"][idxM, best_f]
-        occ_f = bins_f["n"] > 0
-        proto_f = jnp.where(occ_f, sumx_f / jnp.where(occ_f, bins_f["n"], 1.0),
-                            jnp.inf)
-        maskL = occ_f & (proto_f <= best_c[:, None])
-        left = stats.tree_reduce_merge(
-            jax.tree.map(lambda a: jnp.where(maskL, a, 0.0), bins_f), axis=1)
-        total_b = stats.tree_reduce_merge(bins_f, axis=1)
-        right = stats.subtract(total_b, left)
-        st["ystats"] = jax.tree.map(
-            lambda a, v: a.at[c0i].set(v, mode="drop"), st["ystats"], left)
-        st["ystats"] = jax.tree.map(
-            lambda a, v: a.at[c1i].set(v, mode="drop"), st["ystats"], right)
-
-        # children inherit a dynamic radius r = sigma_x / k from the parent's
-        # per-feature x distribution estimated off the QO bins (paper §5.2)
-        occ = state["ao_y"]["n"]                                  # (M, F, C)
-        nb = jnp.maximum(occ, 1.0)
-        proto = jnp.where(occ > 0, state["ao_sum_x"] / nb, 0.0)
-        n_f = occ.sum(-1)
-        mean_x = (occ * proto).sum(-1) / jnp.maximum(n_f, 1.0)
-        var_x = (occ * (proto - mean_x[..., None]) ** 2).sum(-1) / jnp.maximum(n_f - 1.0, 1.0)
-        sigma = jnp.sqrt(jnp.maximum(var_x, 1e-12))               # (M, F)
-        child_r = jnp.maximum(sigma / cfg.sigma_k, 1e-6)
-        for ci in (c0i, c1i):
-            st["ao_radius"] = st["ao_radius"].at[ci].set(child_r, mode="drop")
-            st["ao_origin"] = st["ao_origin"].at[ci].set(mean_x, mode="drop")
-            st["ao_sum_x"] = st["ao_sum_x"].at[ci].set(0.0, mode="drop")
-            st["ao_y"] = jax.tree.map(
-                lambda a: a.at[ci].set(0.0, mode="drop"), st["ao_y"])
-
-        st["n_nodes"] = state["n_nodes"] + 2 * jnp.sum(can.astype(jnp.int32))
-        # failed attempts still reset the grace counter
-        st["seen"] = jnp.where(attempt & ~can, 0.0, st["seen"])
-        return st
-
-    return jax.lax.cond(attempt.any(), do_attempts, lambda s: dict(s), state)
+    state, _ = jax.lax.scan(body, state, (Xc, yc))
+    return state
 
 
 def n_leaves(state: TreeState) -> jax.Array:

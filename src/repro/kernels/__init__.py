@@ -1,3 +1,7 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+# Pallas kernel layer for the QO hot spots (DESIGN.md §2):
+#   qo_update.py        — single-table batched insert (Algorithm 1)
+#   qo_query.py         — single-table split query (Algorithm 2)
+#   qo_update_leaves.py — forest-scale insert: every (leaf, feature) table
+#   qo_query_batched.py — forest-scale query with attempt masking
+#   ops.py              — public wrappers (pallas | interpret | jnp backends)
+#   ref.py              — pure-jnp oracles delegating to repro.core.qo

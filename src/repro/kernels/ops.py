@@ -1,8 +1,20 @@
 """Public jit'd wrappers over the Pallas QO kernels.
 
-On TPU these run the compiled kernels; elsewhere (this container) they run
-the same kernel bodies under ``interpret=True`` (Pallas' CPU interpreter),
-which is how correctness is validated against :mod:`repro.kernels.ref`.
+Single-table ops (``qo_update`` / ``qo_best_split``) and the forest-scale
+ops the Hoeffding tree hot path dispatches through (``forest_update`` /
+``forest_best_splits``).  Every op takes a ``backend``:
+
+* ``"pallas"``    — the compiled TPU kernel (the production path),
+* ``"interpret"`` — the same kernel body under Pallas' CPU interpreter
+                    (correctness validation against :mod:`repro.kernels.ref`),
+* ``"jnp"``       — a fused pure-jnp lowering of the same math (XLA-fused
+                    scatters + cumulative scans), the fast path off-TPU.
+
+``backend=None`` resolves to ``"pallas"`` on TPU and ``"jnp"`` elsewhere.
+The jnp lowering of the query uses prefix *sums* of (n, n*mean,
+m2 + n*mean^2) rather than log-depth Chan merges — one fused ``cumsum``
+instead of hundreds of tiny ops; the kernels and the
+:mod:`repro.core.qo` oracle keep the fully robust merge (DESIGN.md §2.4).
 """
 from __future__ import annotations
 
@@ -12,15 +24,30 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import qo as qo_lib
+from repro.core import stats
 from repro.kernels import ref as _ref
 from repro.kernels.qo_update import qo_update_pallas
 from repro.kernels.qo_query import qo_query_pallas
+from repro.kernels.qo_update_leaves import (
+    pack_forest, unpack_forest, qo_update_leaves_pallas, round_up)
+from repro.kernels.qo_query_batched import qo_query_batched_pallas
 
-__all__ = ["qo_update", "qo_best_split", "default_interpret"]
+__all__ = [
+    "qo_update", "qo_best_split", "default_interpret", "resolve_backend",
+    "forest_bin_ids", "forest_update", "forest_best_splits",
+]
 
 
 def default_interpret() -> bool:
     return jax.default_backend() != "tpu"
+
+
+def resolve_backend(backend: str | None) -> str:
+    """None/'auto' -> compiled kernels on TPU, fused jnp elsewhere."""
+    if backend in (None, "auto"):
+        return "pallas" if jax.default_backend() == "tpu" else "jnp"
+    assert backend in ("pallas", "interpret", "jnp"), backend
+    return backend
 
 
 def _pad_to(arr, mult, fill=0.0):
@@ -63,3 +90,152 @@ def qo_best_split(table: qo_lib.QOTable, *,
         merit=jnp.where(valid, score[best], 0.0),
         valid=valid,
     )
+
+
+# --------------------------------------------------------------------------
+# forest-scale ops: every (leaf, feature) table of a Hoeffding tree at once
+# --------------------------------------------------------------------------
+
+def forest_bin_ids(ao_radius, ao_origin, leaf, X, n_bins: int) -> jax.Array:
+    """(B, F) bin ids of each row in its routed leaf's per-feature tables."""
+    r = ao_radius[leaf]                     # (B, F)
+    o = ao_origin[leaf]
+    h = jnp.floor((X - o) / r).astype(jnp.int32) + n_bins // 2
+    return jnp.clip(h, 0, n_bins - 1)
+
+
+def _forest_update_jnp(ao_y, ao_sum_x, ao_radius, ao_origin, leaf, X, y, w):
+    """Fused-jnp lowering: ONE stacked segment-reduction + two-pass M2."""
+    M, F, C = ao_sum_x.shape
+    bins = forest_bin_ids(ao_radius, ao_origin, leaf, X, C)
+    seg = ((leaf[:, None] * F + jnp.arange(F)[None, :]) * C + bins).reshape(-1)
+    wr = jnp.repeat(w, F)
+    yr = jnp.repeat(y, F)
+    xf = X.reshape(-1)
+    pay = jnp.stack([wr, wr * yr, wr * xf], 1)              # (B*F, 3)
+    acc = jax.ops.segment_sum(pay, seg, M * F * C)
+    nb, syb, sxb = acc[:, 0], acc[:, 1], acc[:, 2]
+    meanb = jnp.where(nb > 0, syb / jnp.where(nb > 0, nb, 1.0), 0.0)
+    # second pass: residuals against the tile bin mean (exact within tile)
+    m2b = jax.ops.segment_sum(wr * (yr - meanb[seg]) ** 2, seg, M * F * C)
+    tile = {"n": nb.reshape(M, F, C), "mean": meanb.reshape(M, F, C),
+            "m2": m2b.reshape(M, F, C)}
+    # Chan merge (Eqs. 4-5) of the tile into the running tables
+    return stats.merge(ao_y, tile), ao_sum_x + sxb.reshape(M, F, C)
+
+
+def _pad_batch(leaf, X, y, w, tile_b):
+    B, F = X.shape
+    Bp = round_up(max(B, tile_b), tile_b)
+    pad = Bp - B
+    if pad:
+        leaf = jnp.concatenate([leaf, jnp.full((pad,), -1, leaf.dtype)])
+        X = jnp.concatenate([X, jnp.zeros((pad, F), X.dtype)])
+        y = jnp.concatenate([y, jnp.zeros((pad,), y.dtype)])
+        w = jnp.concatenate([w, jnp.zeros((pad,), w.dtype)])
+    return leaf, X, y, w
+
+
+def forest_update(ao_y, ao_sum_x, ao_radius, ao_origin, leaf, X, y, w=None, *,
+                  backend: str | None = None, tile_b: int = 256,
+                  tile_m: int = 128):
+    """Absorb a routed batch into every (leaf, feature) QO table.
+
+    ao_y: Stats dict of (M, F, C); ao_sum_x: (M, F, C); ao_radius/ao_origin:
+    (M, F); leaf: (B,) int32 routed leaf ids; X: (B, F); y: (B,).
+    Returns the merged (ao_y, ao_sum_x).
+
+    Deliberately NOT jitted: the tree's ``update`` traces it inline so XLA
+    fuses the whole absorb stage (a nested jit would block that); jit it
+    yourself for standalone use.
+    """
+    backend = resolve_backend(backend)
+    X = jnp.asarray(X, jnp.float32)
+    y = jnp.asarray(y, jnp.float32).reshape(-1)
+    w = jnp.ones_like(y) if w is None else jnp.asarray(w, jnp.float32).reshape(-1)
+    if backend == "jnp":
+        return _forest_update_jnp(ao_y, ao_sum_x, ao_radius, ao_origin,
+                                  leaf, X, y, w)
+
+    M, F, C = ao_sum_x.shape
+    tile_m = min(tile_m, round_up(M, 8))
+    tile_b = min(tile_b, round_up(X.shape[0], 128))
+    leaf, X, y, w = _pad_batch(leaf, X, y, w, tile_b)
+    dense = pack_forest(ao_y, ao_sum_x, ao_radius, ao_origin, tile_m=tile_m)
+    dense = qo_update_leaves_pallas(
+        dense, leaf[None, :], X.T, y[None, :], w[None, :], n_bins=C,
+        tile_b=tile_b, tile_m=tile_m, interpret=(backend == "interpret"))
+    return unpack_forest(dense, M, C)
+
+
+def _forest_query_jnp(ao_y, ao_sum_x, attempt):
+    """Fused-jnp lowering of the batched query: one cumsum over stacked
+    prefix payloads + cummax/cummin neighbour scans (DESIGN.md §2.4)."""
+    M, F, C = ao_sum_x.shape
+    n = ao_y["n"].reshape(M * F, C)
+    mean = ao_y["mean"].reshape(M * F, C)
+    m2 = ao_y["m2"].reshape(M * F, C)
+    sum_x = ao_sum_x.reshape(M * F, C)
+    occ = n > 0
+
+    # VR is shift-invariant: center bin means on each table's grand mean so
+    # SQ - SY^2/N never cancels against a large target offset (the same
+    # robustness the Chan-merge paths get structurally)
+    n_tab = n.sum(-1, keepdims=True)
+    grand = (n * mean).sum(-1, keepdims=True) / jnp.maximum(n_tab, 1.0)
+    mu = mean - grand
+    sy = n * mu
+    sq = m2 + sy * mu
+    pref = jnp.cumsum(jnp.stack([n, sy, sq], 0), axis=-1)    # (3, M*F, C)
+    Nl, SYl, SQl = pref[0], pref[1], pref[2]
+    Nt, SYt, SQt = Nl[:, -1:], SYl[:, -1:], SQl[:, -1:]
+    Nr, SYr, SQr = Nt - Nl, SYt - SYl, SQt - SQl
+
+    def var(NN, SY, SQ):
+        d = NN - 1.0
+        m2_ = jnp.maximum(SQ - SY * SY / jnp.where(NN > 0, NN, 1.0), 0.0)
+        return jnp.where(d > 0, m2_ / jnp.where(d > 0, d, 1.0), 0.0)
+
+    s2d = var(Nt, SYt, SQt)
+    ntot = jnp.maximum(Nt, 1.0)
+    vr = s2d - (Nl / ntot) * var(Nl, SYl, SQl) - (Nr / ntot) * var(Nr, SYr, SQr)
+
+    idx = jnp.arange(C)
+    last = jax.lax.cummax(jnp.where(occ, idx, -1), axis=1)
+    first_after = jax.lax.cummin(jnp.where(occ, idx, C), axis=1, reverse=True)
+    nxt = jnp.concatenate([first_after[:, 1:], jnp.full((M * F, 1), C)], 1)
+    ok = (last >= 0) & (nxt < C) & jnp.repeat(attempt, F)[:, None]
+    proto = jnp.where(occ, sum_x / jnp.where(occ, n, 1.0), 0.0)
+    p_l = jnp.take_along_axis(proto, jnp.maximum(last, 0), 1)
+    p_r = jnp.take_along_axis(proto, jnp.minimum(nxt, C - 1), 1)
+    cand = 0.5 * (p_l + p_r)
+    score = jnp.where(ok, vr, -jnp.inf)
+    return score, cand
+
+
+def forest_best_splits(ao_y, ao_sum_x, ao_radius, ao_origin, attempt, *,
+                       backend: str | None = None, tile_m: int = 128):
+    """Best split candidate of every (leaf, feature) table, in one pass.
+
+    attempt: (M,) bool — tables of leaves below their grace period are
+    masked out (and whole quiet tiles are skipped on the kernel path).
+    Returns (merit, threshold), both (M, F); merit is -inf where no valid
+    boundary exists or the leaf is not attempting.  Not jitted, same
+    reason as :func:`forest_update`.
+    """
+    backend = resolve_backend(backend)
+    M, F, C = ao_sum_x.shape
+    if backend == "jnp":
+        score, cand = _forest_query_jnp(ao_y, ao_sum_x, attempt)
+    else:
+        tile_m = min(tile_m, round_up(M, 8))
+        dense = pack_forest(ao_y, ao_sum_x, ao_radius, ao_origin, attempt,
+                            tile_m=tile_m)
+        out = qo_query_batched_pallas(dense, tile_m=tile_m,
+                                      interpret=(backend == "interpret"))
+        score = jnp.transpose(out[:, 0, :M, :], (1, 0, 2)).reshape(M * F, -1)
+        cand = jnp.transpose(out[:, 1, :M, :], (1, 0, 2)).reshape(M * F, -1)
+    best = jnp.argmax(score, -1)
+    merit = jnp.max(score, -1).reshape(M, F)
+    thr = jnp.take_along_axis(cand, best[:, None], 1)[:, 0].reshape(M, F)
+    return merit, thr

@@ -41,6 +41,42 @@ def qo_update_ref(dense, scal, x, y, w) -> jax.Array:
     return pack_table(t)[0]
 
 
+def forest_update_ref(ao_y, ao_sum_x, ao_radius, ao_origin, leaf, X, y, w=None):
+    """Oracle for the forest update: per-(leaf, feature) masked qo.update.
+
+    Loops tables in Python (M*F independent single-table updates with the
+    batch masked to the rows routed to that leaf) — slow, unambiguous.
+    """
+    M, F, C = ao_sum_x.shape
+    y = jnp.asarray(y, jnp.float32).reshape(-1)
+    w = jnp.ones_like(y) if w is None else jnp.asarray(w, jnp.float32)
+
+    def one(m, f):
+        t = {"radius": ao_radius[m, f], "origin": ao_origin[m, f],
+             "sum_x": ao_sum_x[m, f],
+             "y": jax.tree.map(lambda a: a[m, f], ao_y)}
+        sel = (leaf == m).astype(jnp.float32) * w
+        return qo_lib.update(t, X[:, f], y, sel)
+
+    tables = [[one(m, f) for f in range(F)] for m in range(M)]
+    stackf = lambda getter: jnp.stack(
+        [jnp.stack([getter(tables[m][f]) for f in range(F)]) for m in range(M)])
+    new_y = {k: stackf(lambda t, k=k: t["y"][k]) for k in ("n", "mean", "m2")}
+    new_sum_x = stackf(lambda t: t["sum_x"])
+    return new_y, new_sum_x
+
+
+def forest_query_ref(ao_y, ao_sum_x, attempt):
+    """Oracle for the batched query: vmap(vmap(qo.best_split)) + masking."""
+    M, F, C = ao_sum_x.shape
+    split = jax.vmap(jax.vmap(
+        lambda sx, yb: qo_lib.best_split(
+            {"radius": jnp.float32(1.0), "origin": jnp.float32(0.0),
+             "sum_x": sx, "y": yb})))(ao_sum_x, ao_y)
+    merit = jnp.where(split.valid & attempt[:, None], split.merit, -jnp.inf)
+    return merit, split.threshold
+
+
 def qo_query_ref(dense) -> jax.Array:
     """Oracle for qo_query_pallas: (8, C) -> (8, C) scores/thresholds."""
     scal = jnp.array([[1.0, 0.0]], jnp.float32)  # radius/origin unused here

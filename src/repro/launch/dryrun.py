@@ -130,11 +130,11 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         result["traceback"] = traceback.format_exc()[-2000:]
         return result
 
-    cost = compiled.cost_analysis()
+    from repro.launch import hlocost
+    cost = hlocost.cost_dict(compiled)
     mem = compiled.memory_analysis()
     hlo = compiled.as_text()
     # trip-count-aware walk (cost_analysis counts scan bodies once)
-    from repro.launch import hlocost
     walked = hlocost.analyze(hlo)
     coll = walked["collectives"]
     coll_total = walked["collective_bytes"]

@@ -69,6 +69,15 @@ SKIP_OPS = {"parameter", "constant", "tuple", "get-tuple-element", "bitcast",
             "exponential-minus-one", "log-plus-one", "atan2", "cosine", "sine"}
 
 
+def cost_dict(compiled) -> Dict[str, float]:
+    """``compiled.cost_analysis()`` across jax versions: older jax returns
+    one dict per partition, newer a single dict — normalize to a dict."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost
+
+
 def _shape_bytes(type_str: str) -> int:
     total = 0
     for dt, dims in _SHAPE.findall(type_str):
@@ -128,19 +137,20 @@ def _dot_flops(instr: Instruction, symtab: Dict[str, Tuple[str, tuple]]) -> floa
     out_n = 1
     for d in out_dims:
         out_n *= d
-    # lhs operand name
-    m = re.search(r"\(\s*(?:[a-z0-9]+\[[0-9,]*\][^%]*)?%?([\w.\-]+)", instr.line[instr.line.index(instr.op + "("):])
+    # lhs operand: shape literals carry commas ("f32[64,64]{1,0} %name"),
+    # so match the first inline shape (or fall back to the symbol table)
+    # rather than splitting the argument list on ","
     lhs_dims = None
     ops = re.search(rf"{re.escape(instr.op)}\((.*?)\)", instr.line)
     if ops:
-        first = ops.group(1).split(",")[0].strip()
-        nm = first.split(" ")[-1].lstrip("%")
-        if nm in symtab:
-            lhs_dims = symtab[nm][1]
+        args = ops.group(1)
+        shape = _SHAPE.search(args)
+        if shape:
+            lhs_dims = tuple(int(d) for d in shape.group(2).split(",") if d)
         else:
-            dt, dims = _shape_dims(first)
-            if dims:
-                lhs_dims = dims
+            names = re.findall(r"%([\w.\-]+)", args)
+            if names and names[0] in symtab:
+                lhs_dims = symtab[names[0]][1]
     contract = 1
     mm = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", instr.line)
     if mm and lhs_dims:

@@ -7,17 +7,24 @@ from __future__ import annotations
 
 import jax
 
-__all__ = ["make_production_mesh", "make_local_mesh"]
+__all__ = ["make_mesh_auto", "make_production_mesh", "make_local_mesh"]
 
 
-def _auto(n):
-    return (jax.sharding.AxisType.Auto,) * n
+def make_mesh_auto(shape, axes):
+    """``jax.make_mesh`` with explicit Auto axis types where this jax
+    version supports them (``axis_types`` landed after 0.4.37; Auto is the
+    default either way)."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes,
+                         axis_types=(axis_type.Auto,) * len(axes))
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+    return make_mesh_auto(shape, axes)
 
 
 def make_local_mesh(data: int = 1, model: int = 1):
@@ -25,5 +32,4 @@ def make_local_mesh(data: int = 1, model: int = 1):
     n = len(jax.devices())
     data = min(data, n)
     model = min(model, n // data)
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=_auto(2))
+    return make_mesh_auto((data, model), ("data", "model"))

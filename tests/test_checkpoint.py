@@ -67,8 +67,8 @@ def test_reshard_onto_new_sharding(tmp_path):
     tree = {"w": jnp.arange(32.0).reshape(8, 4)}
     ck.save(1, tree, blocking=True)
     rest = ck.restore(1, jax.eval_shape(lambda: tree))
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch.mesh import make_mesh_auto
+    mesh = make_mesh_auto((1,), ("data",))
     sh = {"w": NamedSharding(mesh, P("data", None))}
     placed = reshard(rest, sh)
     assert placed["w"].sharding == sh["w"]

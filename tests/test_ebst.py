@@ -4,7 +4,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import ebst
-from tests.test_qo import exact_best_split
+from tests.helpers import exact_best_split
 
 
 def test_ebst_split_matches_batch_oracle(rng):

@@ -3,31 +3,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
-from repro.core import ebst, qo, stats
-from repro.data import synth
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
-
-def exact_best_split(x, y):
-    """Exhaustive batch VR maximization (the batch-DT oracle)."""
-    order = np.argsort(x, kind="stable")
-    xs, ys = np.asarray(x, np.float64)[order], np.asarray(y, np.float64)[order]
-    n = len(ys)
-    csum, csq = np.cumsum(ys), np.cumsum(ys ** 2)
-    tot, totsq = csum[-1], csq[-1]
-    s2d = np.var(ys, ddof=1)
-    best = (-np.inf, None)
-    for i in range(n - 1):
-        if xs[i] == xs[i + 1]:
-            continue
-        nl, nr = i + 1, n - i - 1
-        vl = (csq[i] - csum[i] ** 2 / nl) / (nl - 1) if nl > 1 else 0.0
-        vr = ((totsq - csq[i]) - (tot - csum[i]) ** 2 / nr) / (nr - 1) if nr > 1 else 0.0
-        m = s2d - nl / n * vl - nr / n * vr
-        if m > best[0]:
-            best = (m, xs[i])
-    return best
+from repro.core import ebst, qo, stats  # noqa: E402
+from repro.data import synth  # noqa: E402
+from tests.helpers import exact_best_split  # noqa: E402
 
 
 def test_qo_finds_planted_split(rng):

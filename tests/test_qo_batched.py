@@ -1,0 +1,201 @@
+"""Forest-scale batched kernels vs the jnp reference (interpret mode).
+
+Property coverage demanded by the batched-QO pipeline: ragged batches
+(B not a tile multiple), empty leaves (no routed rows), and tables with a
+single occupied bin (no valid boundary).  Acceptance bar: bin counts and
+VR scores within 1e-4 of the per-table :mod:`repro.core.qo` oracle.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import hoeffding as ht
+from repro.core import stats
+from repro.data import synth
+from repro.kernels import ops, ref
+from repro.kernels.qo_update_leaves import pack_forest, unpack_forest
+
+TOL = 1e-4
+
+
+def _random_forest(rng, M, F, C, occupied_frac=1.0):
+    """A forest state built by streaming random rows through the oracle."""
+    ao_y = stats.init((M, F, C))
+    ao_sum_x = jnp.zeros((M, F, C))
+    ao_radius = jnp.array(rng.uniform(0.05, 0.4, (M, F)).astype(np.float32))
+    ao_origin = jnp.array(rng.normal(0, 0.5, (M, F)).astype(np.float32))
+    B = 160
+    leaf = jnp.array(rng.integers(0, max(1, int(M * occupied_frac)), B),
+                     jnp.int32)
+    X = jnp.array(rng.normal(0, 1, (B, F)).astype(np.float32))
+    y = jnp.array(rng.normal(0, 2, B).astype(np.float32))
+    ao_y, ao_sum_x = ref.forest_update_ref(
+        ao_y, ao_sum_x, ao_radius, ao_origin, leaf, X, y)
+    return ao_y, ao_sum_x, ao_radius, ao_origin
+
+
+@pytest.mark.parametrize("B", [1, 37, 129, 256])
+def test_update_leaves_kernel_matches_oracle_ragged(B, rng):
+    """Ragged batch sizes: padding rows must contribute nothing."""
+    M, F, C = 9, 3, 48
+    ao_y = stats.init((M, F, C))
+    ao_sum_x = jnp.zeros((M, F, C))
+    ao_radius = jnp.array(rng.uniform(0.05, 0.4, (M, F)).astype(np.float32))
+    ao_origin = jnp.array(rng.normal(0, 0.5, (M, F)).astype(np.float32))
+    # leaf 0 never routed -> stays empty through the kernel too
+    leaf = jnp.array(rng.integers(1, M, B), jnp.int32)
+    X = jnp.array(rng.normal(0, 1, (B, F)).astype(np.float32))
+    y = jnp.array(rng.normal(0, 2, B).astype(np.float32))
+
+    ry, rsx = ref.forest_update_ref(ao_y, ao_sum_x, ao_radius, ao_origin,
+                                    leaf, X, y)
+    for backend in ("interpret", "jnp"):
+        ky, ksx = ops.forest_update(ao_y, ao_sum_x, ao_radius, ao_origin,
+                                    leaf, X, y, backend=backend)
+        for k in ("n", "mean", "m2"):
+            np.testing.assert_allclose(np.asarray(ky[k]), np.asarray(ry[k]),
+                                       atol=TOL, rtol=TOL,
+                                       err_msg=f"{backend}:{k}")
+        np.testing.assert_allclose(np.asarray(ksx), np.asarray(rsx),
+                                   atol=TOL, rtol=TOL)
+        # empty leaf stays exactly empty
+        assert float(jnp.abs(ky["n"][0]).max()) == 0.0
+
+
+def test_update_leaves_kernel_weighted_and_incremental(rng):
+    """Two seeded kernel calls == one oracle pass over the concatenation."""
+    M, F, C = 6, 2, 48
+    ao_y = stats.init((M, F, C))
+    ao_sum_x = jnp.zeros((M, F, C))
+    ao_radius = jnp.full((M, F), 0.2, jnp.float32)
+    ao_origin = jnp.zeros((M, F), jnp.float32)
+    B = 120
+    leaf = jnp.array(rng.integers(0, M, B), jnp.int32)
+    X = jnp.array(rng.normal(0, 1, (B, F)).astype(np.float32))
+    y = jnp.array(rng.normal(0, 1, B).astype(np.float32))
+    w = jnp.array(rng.uniform(0.1, 2.0, B).astype(np.float32))
+
+    ky, ksx = ops.forest_update(ao_y, ao_sum_x, ao_radius, ao_origin,
+                                leaf[:60], X[:60], y[:60], w[:60],
+                                backend="interpret")
+    ky, ksx = ops.forest_update(ky, ksx, ao_radius, ao_origin,
+                                leaf[60:], X[60:], y[60:], w[60:],
+                                backend="interpret")
+    ry, rsx = ref.forest_update_ref(ao_y, ao_sum_x, ao_radius, ao_origin,
+                                    leaf, X, y, w)
+    for k in ("n", "mean", "m2"):
+        np.testing.assert_allclose(np.asarray(ky[k]), np.asarray(ry[k]),
+                                   atol=5e-4, rtol=5e-4, err_msg=k)
+    np.testing.assert_allclose(np.asarray(ksx), np.asarray(rsx),
+                               atol=5e-4, rtol=5e-4)
+
+
+@pytest.mark.parametrize("backend", ["interpret", "jnp"])
+def test_query_batched_matches_oracle(backend, rng):
+    M, F, C = 12, 3, 48
+    ao_y, ao_sum_x, ao_radius, ao_origin = _random_forest(rng, M, F, C)
+    attempt = jnp.array(rng.uniform(size=M) < 0.6)
+
+    rm, rt = ref.forest_query_ref(ao_y, ao_sum_x, attempt)
+    km, kt = ops.forest_best_splits(ao_y, ao_sum_x, ao_radius, ao_origin,
+                                    attempt, backend=backend)
+    rm, rt = np.asarray(rm), np.asarray(rt)
+    km, kt = np.asarray(km), np.asarray(kt)
+    valid = np.isfinite(rm)
+    assert (np.isfinite(km) == valid).all(), "validity mask must agree"
+    np.testing.assert_allclose(km[valid], rm[valid], atol=TOL, rtol=TOL)
+    np.testing.assert_allclose(kt[valid], rt[valid], atol=TOL, rtol=TOL)
+
+
+def test_query_batched_empty_and_single_bin_tables(rng):
+    """Empty tables and single-occupied-bin tables -> no valid boundary."""
+    M, F, C = 4, 2, 48
+    ao_y = stats.init((M, F, C))
+    ao_sum_x = jnp.zeros((M, F, C))
+    ao_radius = jnp.full((M, F), 0.1, jnp.float32)
+    ao_origin = jnp.zeros((M, F), jnp.float32)
+    # leaf 1: every observation lands in ONE bin (identical x)
+    leaf = jnp.full((50,), 1, jnp.int32)
+    X = jnp.zeros((50, F), jnp.float32)
+    y = jnp.array(rng.normal(0, 1, 50).astype(np.float32))
+    ao_y, ao_sum_x = ref.forest_update_ref(ao_y, ao_sum_x, ao_radius,
+                                           ao_origin, leaf, X, y)
+    # leaf 2: a real two-cluster table
+    leaf2 = jnp.full((60,), 2, jnp.int32)
+    X2 = jnp.array(np.repeat([[-1.0], [1.0]], 30, 0).astype(np.float32))
+    X2 = jnp.tile(X2, (1, F))
+    y2 = jnp.array(np.repeat([0.0, 5.0], 30).astype(np.float32))
+    ao_y, ao_sum_x = ref.forest_update_ref(ao_y, ao_sum_x, ao_radius,
+                                           ao_origin, leaf2, X2, y2)
+
+    attempt = jnp.ones((M,), bool)
+    for backend in ("interpret", "jnp"):
+        km, kt = ops.forest_best_splits(ao_y, ao_sum_x, ao_radius, ao_origin,
+                                        attempt, backend=backend)
+        km = np.asarray(km)
+        assert not np.isfinite(km[0]).any(), "empty leaf must be invalid"
+        assert not np.isfinite(km[1]).any(), "single-bin tables are invalid"
+        assert np.isfinite(km[2]).all(), "two-cluster tables must be valid"
+        # the split must separate the clusters
+        assert (-1.0 < np.asarray(kt)[2]).all() and (np.asarray(kt)[2] < 1.0).all()
+        # masked leaves report -inf even with valid tables
+        km_masked, _ = ops.forest_best_splits(
+            ao_y, ao_sum_x, ao_radius, ao_origin,
+            jnp.zeros((M,), bool), backend=backend)
+        assert not np.isfinite(np.asarray(km_masked)).any()
+
+
+def test_pack_unpack_roundtrip(rng):
+    M, F, C = 13, 3, 48
+    ao_y, ao_sum_x, ao_radius, ao_origin = _random_forest(rng, M, F, C)
+    dense = pack_forest(ao_y, ao_sum_x, ao_radius, ao_origin)
+    uy, usx = unpack_forest(dense, M, C)
+    for k in ("n", "mean", "m2"):
+        np.testing.assert_array_equal(np.asarray(uy[k]), np.asarray(ao_y[k]))
+    np.testing.assert_array_equal(np.asarray(usx), np.asarray(ao_sum_x))
+
+
+def test_tree_backends_agree_end_to_end():
+    """jnp fast path and oracle backend grow near-identical trees."""
+    X, y = synth.piecewise_regression(6000, n_features=3, seed=9)
+    trees = {}
+    for backend in ("jnp", "oracle"):
+        cfg = ht.HTRConfig(n_features=3, max_nodes=31, n_bins=32,
+                           grace_period=200, max_depth=6, r0=0.3,
+                           split_backend=backend)
+        s = ht.init_state(cfg)
+        upd = jax.jit(functools.partial(ht.update, cfg))
+        for i in range(0, 6000 - 255, 256):
+            s = upd(s, jnp.array(X[i:i + 256]), jnp.array(y[i:i + 256]))
+        trees[backend] = (cfg, s)
+    cfg_j, s_j = trees["jnp"]
+    cfg_o, s_o = trees["oracle"]
+    assert int(s_j["n_nodes"]) == int(s_o["n_nodes"])
+    Xt, yt = synth.piecewise_regression(1500, n_features=3, seed=99)
+    p_j = np.asarray(ht.predict(cfg_j, s_j, jnp.array(Xt)))
+    p_o = np.asarray(ht.predict(cfg_o, s_o, jnp.array(Xt)))
+    mse_j = float(np.mean((p_j - yt) ** 2))
+    mse_o = float(np.mean((p_o - yt) ** 2))
+    assert abs(mse_j - mse_o) <= 0.01 * max(mse_o, 1e-9)
+
+
+def test_update_stream_matches_batch_loop():
+    """One-dispatch scan driver == the per-batch python loop."""
+    X, y = synth.piecewise_regression(4096, n_features=2, seed=4)
+    cfg = ht.HTRConfig(n_features=2, max_nodes=15, n_bins=32,
+                       grace_period=150, max_depth=4, r0=0.3)
+    s_loop = ht.init_state(cfg)
+    upd = jax.jit(functools.partial(ht.update, cfg))
+    for i in range(0, 4096, 256):
+        s_loop = upd(s_loop, jnp.array(X[i:i + 256]), jnp.array(y[i:i + 256]))
+    s_scan = ht.update_stream(cfg, ht.init_state(cfg), jnp.array(X),
+                              jnp.array(y), batch_size=256)
+    assert int(s_loop["n_nodes"]) == int(s_scan["n_nodes"])
+    np.testing.assert_array_equal(np.asarray(s_loop["is_leaf"]),
+                                  np.asarray(s_scan["is_leaf"]))
+    np.testing.assert_allclose(np.asarray(s_loop["ystats"]["mean"]),
+                               np.asarray(s_scan["ystats"]["mean"]),
+                               rtol=1e-5, atol=1e-5)

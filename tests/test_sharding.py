@@ -65,8 +65,8 @@ def test_distributed_sketch_merge_8_devices():
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
     from repro.core import qo, sketch
-    mesh = jax.make_mesh((8,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch.mesh import make_mesh_auto
+    mesh = make_mesh_auto((8,), ("data",))
     rng = np.random.default_rng(0)
     x = rng.normal(0, 1, 8 * 500).astype(np.float32)
 
@@ -95,8 +95,8 @@ def test_int8_quantized_psum_8_devices():
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
     from repro.optim import compress
-    mesh = jax.make_mesh((8,), ("pod",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch.mesh import make_mesh_auto
+    mesh = make_mesh_auto((8,), ("pod",))
     rng = np.random.default_rng(0)
     g = rng.normal(0, 0.1, (8, 128)).astype(np.float32)
 

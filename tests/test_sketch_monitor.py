@@ -22,8 +22,8 @@ def test_all_merge_across_devices():
     exercises the collective path; multi-device covered in test_sharding)."""
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
-    mesh = jax.make_mesh((1,), ("d",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch.mesh import make_mesh_auto
+    mesh = make_mesh_auto((1,), ("d",))
     rng = np.random.default_rng(0)
     x = rng.normal(0, 1, 1024).astype(np.float32)
 

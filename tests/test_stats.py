@@ -3,9 +3,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
-from repro.core import stats
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import stats  # noqa: E402
 
 finite_arrays = st.lists(
     st.floats(-1e4, 1e4, allow_nan=False, width=32), min_size=1, max_size=200)

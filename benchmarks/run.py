@@ -17,7 +17,7 @@ from repro.models import layers as L
 
 L.set_compute_dtype(jnp.float32)  # CPU container cannot execute bf16 dots
 
-from benchmarks import aos, kernels, roofline, tree  # noqa: E402
+from benchmarks import aos, forest, kernels, roofline, tree  # noqa: E402
 
 REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
@@ -76,6 +76,28 @@ def main() -> None:
     ]
     csv.extend(tree_rows)
     _write_bench("BENCH_tree.json", tree_rows)
+
+    # --- forest-level e2e: vmapped tree axis vs loop-over-trees ----------
+    frep = forest.run()
+    report["forest"] = frep
+    preq = frep["prequential"]
+    forest_rows = [
+        ("forest_update_vmapped",
+         1e6 / frep["vmapped"]["instances_per_s"],
+         f"T={frep['n_trees']}"
+         f" speedup_vs_loop={frep['speedup_vs_loop']:.3f}"),
+        ("forest_update_loop", 1e6 / frep["loop"]["instances_per_s"],
+         f"T={frep['n_trees']} per-tree python loop baseline"),
+        # accuracy-only row: us_per_call deliberately 0 so the timing is
+        # not double-counted with the forest_update_vmapped row above
+        ("forest_prequential_drift", 0.0,
+         f"forest_mse={preq['forest_mse']:.3f}"
+         f" best_member_mse={preq['best_member_mse']:.3f}"
+         f" beats_best_member={preq['forest_beats_best_member']}"
+         f" drift_resets={preq['drift_resets']}"),
+    ]
+    csv.extend(forest_rows)
+    _write_bench("BENCH_forest.json", forest_rows)
 
     # --- kernel micro-benches ---------------------------------------------
     krep = kernels.run()

@@ -7,13 +7,9 @@ each one proposes, their memory footprint, and validates that the QO
 split is within a whisker of the exhaustive baseline — the paper's core
 claim (Fig. 1) on one screen.
 """
-import sys
-
 import jax
 import jax.numpy as jnp
 import numpy as np
-
-sys.path.insert(0, "src")
 
 from repro.core import ebst, qo
 from repro.data import synth

@@ -7,10 +7,7 @@ Runs the same ``serve_step`` code paths the 512-chip dry-run compiles
 mesh with a reduced h2o-danube config — exercising the sliding-window
 ring cache (the sub-quadratic path that makes long_500k feasible).
 """
-import sys
 import time
-
-sys.path.insert(0, "src")
 
 import jax
 import jax.numpy as jnp

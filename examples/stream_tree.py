@@ -8,15 +8,13 @@ a second phase with drifted thresholds to show the tree keeps adapting
 (new splits in fresh regions).
 """
 import functools
-import sys
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-sys.path.insert(0, "src")
-
 from repro.core import hoeffding as ht
+from repro.data.synth import piecewise_target
 
 rng = np.random.default_rng(0)
 F, BS = 4, 256
@@ -27,16 +25,10 @@ upd = jax.jit(functools.partial(ht.update, cfg))
 pred = jax.jit(functools.partial(ht.predict, cfg))
 
 
-def target(X, shift=0.0):
-    return np.where(X[:, 0] <= shift,
-                    np.where(X[:, 1] <= 0.5, 1.0, 5.0),
-                    np.where(X[:, 2] <= -0.2, 9.0, 13.0))
-
-
 print("phase 1: stationary stream")
 for step in range(60):
     X = rng.normal(0, 1, (BS, F)).astype(np.float32)
-    y = (target(X) + 0.1 * rng.normal(0, 1, BS)).astype(np.float32)
+    y = (piecewise_target(X) + 0.1 * rng.normal(0, 1, BS)).astype(np.float32)
     yhat = np.asarray(pred(state, jnp.array(X)))       # test-then-train
     mse = float(np.mean((yhat - y) ** 2))
     state = upd(state, jnp.array(X), jnp.array(y))
@@ -47,7 +39,7 @@ for step in range(60):
 print("phase 2: drift (split point moves 0.0 -> 0.8)")
 for step in range(60):
     X = rng.normal(0, 1, (BS, F)).astype(np.float32)
-    y = (target(X, shift=0.8) + 0.1 * rng.normal(0, 1, BS)).astype(np.float32)
+    y = (piecewise_target(X, shift=0.8) + 0.1 * rng.normal(0, 1, BS)).astype(np.float32)
     yhat = np.asarray(pred(state, jnp.array(X)))
     mse = float(np.mean((yhat - y) ** 2))
     state = upd(state, jnp.array(X), jnp.array(y))

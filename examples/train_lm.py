@@ -11,9 +11,6 @@ Kill it mid-run and run it again: it resumes from the latest checkpoint.
 """
 import argparse
 import json
-import sys
-
-sys.path.insert(0, "src")
 
 import jax
 import jax.numpy as jnp

@@ -7,7 +7,7 @@ Layout on disk::
         shard_<host>.npz    # this host's param/opt leaves (flattened keys)
     <dir>/LATEST            # atomic pointer (written via rename)
 
-Design points for 1000+ node deployments (DESIGN.md §6):
+Design points for 1000+ node deployments (DESIGN.md §7):
 * writes go to a temp dir then ``os.rename`` — a preempted writer never
   corrupts the latest checkpoint;
 * an async writer thread overlaps serialization with the next train steps

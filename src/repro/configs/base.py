@@ -57,7 +57,7 @@ class ArchConfig:
 
     @property
     def sub_quadratic(self) -> bool:
-        """Can this arch run 500k-token contexts? (DESIGN.md §5)"""
+        """Can this arch run 500k-token contexts? (DESIGN.md §6)"""
         return self.family in ("ssm", "hybrid") or self.swa_window > 0
 
     @property

@@ -1,0 +1,409 @@
+"""Online-bagged forest of QO Hoeffding tree regressors (DESIGN.md §5).
+
+The strongest streaming regressors in practice are ensembles of Hoeffding
+trees (Adaptive Random Forests); the paper positions QO as the
+split-attempt engine that makes each member cheap enough for real-time
+ensembles.  This module is that ensemble layer, built so the whole forest
+is ONE program over a leading tree axis:
+
+* **online bagging** — each instance reaches tree t with a Poisson(λ)
+  sample weight (Oza & Russell), threaded through every statistic of the
+  member update (:func:`repro.core.hoeffding.update` with ``w``), so
+  bagging costs nothing on top of the fused absorb;
+* **random subspaces** — each member draws a feature mask of
+  ``max(1, round(subspace * F))`` features; masked features still fill
+  their QO tables but can never win a split (ARF-style decorrelation);
+* **fused execution** — the T member updates run as ONE pass: the tree
+  axis folds into the table axis of the PR-1 ``forest_update`` /
+  ``forest_best_splits`` pipeline (global leaf ids ``t*M + leaf``), so
+  absorb and the split query are each a single kernel/XLA call for the
+  whole ensemble and only the cheap per-tree decision/scatter stage is
+  vmapped (:func:`_fused_member_update`);
+* **tree-axis sharding** — every leaf of the forest state carries the
+  tree axis first, so :func:`repro.train.sharding.forest_state_specs`
+  spreads T trees across the device mesh with ``shard_map``; members
+  never communicate except the prediction reduce (``axis_name`` arg);
+* **drift-aware member swap** — each tree keeps an ADWIN-style
+  prequential-error window (long (n, mean, M2) window + short EWMA, the
+  §3 algebra reused on the error stream).  When a short window rises
+  ``drift_kappa`` standard deviations above its long reference, the
+  WORST signalling member is swapped for a fresh tree + subspace +
+  window (at most one per batch, so the forest's memory degrades
+  gracefully under abrupt drift).  The test is per-member and local, so
+  it adds no cross-tree communication.
+
+Functional API mirrors the single tree: :func:`init_forest` ->
+:func:`update` (returns ``(state, aux)`` with prequential metrics) ->
+:func:`predict`; :func:`update_stream` scans a stream in one dispatch and
+returns the prequential MSE traces the benchmarks report.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import hoeffding as ht
+from repro.core import stats
+from repro.kernels import ops as kops
+
+ForestState = dict
+
+__all__ = ["ForestConfig", "init_forest", "update", "update_stream",
+           "predict", "member_predictions", "vote_weights",
+           "n_leaves_per_tree"]
+
+
+@dataclass(frozen=True)
+class ForestConfig:
+    """Static forest hyper-parameters (hashable: pass as a jit static arg).
+
+    tree:      the shared member :class:`repro.core.hoeffding.HTRConfig`.
+    n_trees:   T, the ensemble size (the vmapped/sharded axis).
+    lam:       Poisson rate λ of the online-bagging sample weights
+               (λ = 6 after Adaptive Random Forests).
+    subspace:  fraction of features each member may split on;
+               k = max(1, round(subspace * F)) features are drawn per tree
+               (and re-drawn when the member is reset).
+    vote:      "mean" or "inverse_error" — prediction reduce over members,
+               the latter weighting each tree by
+               (1 / (EWMA prequential MSE + eps)) ** vote_power; members
+               with no error history yet (fresh after init or a reset)
+               vote with weight 0 until their first prequential batch.
+    vote_power: sharpness of the inverse-error vote (higher -> closer to
+               picking the single best member).
+    drift_alpha:       EWMA rate of the short error window.
+    drift_decay:       per-batch decay of the long window's effective count
+               (effective window length 1/(1-decay) batches), so the
+               cold-start transient washes out of the reference.
+    drift_kappa:       sigmas above the long window mean that signal drift.
+    drift_min_batches: effective batches a member's long window must hold
+               before its drift test may fire (cold-start guard; must be
+               below 1/(1-drift_decay) or the test never arms).
+    """
+    tree: ht.HTRConfig
+    n_trees: int = 8
+    lam: float = 6.0
+    subspace: float = 0.7
+    vote: str = "inverse_error"
+    vote_power: float = 4.0
+    drift_alpha: float = 0.5
+    drift_decay: float = 0.9
+    drift_kappa: float = 3.0
+    drift_min_batches: int = 8
+
+    def __post_init__(self):
+        if not 0.0 < self.drift_decay < 1.0:
+            raise ValueError(
+                f"drift_decay={self.drift_decay} must be in (0, 1): it is "
+                f"the per-batch retention of the long window's count")
+        limit = 1.0 / (1.0 - self.drift_decay)
+        if self.drift_min_batches >= limit:
+            raise ValueError(
+                f"drift_min_batches={self.drift_min_batches} can never be "
+                f"reached: the decayed window's effective count asymptotes "
+                f"to 1/(1-drift_decay)={limit:.1f}")
+        if self.tree.n_features >= 2 and self.subspace_k() < 2:
+            raise ValueError(
+                f"subspace={self.subspace} leaves each member a single "
+                f"candidate feature: the Hoeffding ratio test degenerates "
+                f"(second-best merit is -inf, so any positive merit splits "
+                f"immediately); raise subspace so k >= 2")
+
+    def subspace_k(self) -> int:
+        return max(1, int(round(self.subspace * self.tree.n_features)))
+
+
+def _draw_mask(key, F: int, k: int):
+    perm = jax.random.permutation(key, F)
+    return jnp.zeros((F,), bool).at[perm[:k]].set(True)
+
+
+def _poisson_cdf(lam: float, tail: float = 1e-7):
+    """Static inverse-CDF table: [P(X<=0), P(X<=1), ...] up to 1-tail."""
+    import math
+    cdf, p, k, c = [], math.exp(-lam), 0, math.exp(-lam)
+    while c < 1.0 - tail and k < 64:
+        cdf.append(c)
+        k += 1
+        p *= lam / k
+        c += p
+    cdf.append(c)
+    return cdf
+
+
+def _poisson_weights(key, cdf: jax.Array, shape):
+    """Poisson draw by inverse-CDF table lookup.
+
+    Exact up to the table's 1e-7 tail truncation, and — unlike
+    ``jax.random.poisson``'s rejection sampler — free of ``while_loop``:
+    ~10x cheaper per batch on CPU and transparent to vmap/shard_map
+    replication checking.  ``X = #{k : u >= P(X<=k)}``.
+    """
+    u = jax.random.uniform(key, shape)
+    return (u[..., None] >= cdf).sum(-1).astype(jnp.float32)
+
+
+def init_forest(cfg: ForestConfig, key) -> ForestState:
+    """Fresh forest state — a dict pytree whose EVERY leaf has the tree
+    axis (T) first, the invariant the sharding layer relies on:
+
+    ``trees``     member TreeStates stacked on axis 0 (T, ...)
+    ``feat_mask`` (T, F) bool random-subspace masks
+    ``keys``      (T, 2) u32 per-member PRNG keys (bagging + subspace
+                  draws stay independent per member and per shard)
+    ``err_win``   Stats (T,) — long prequential-error window since reset
+    ``err_ewma``  (T,) f32 — short (EWMA) prequential-error window
+    ``resets``    (T,) i32 — drift-reset count (diagnostics)
+    """
+    T, F = cfg.n_trees, cfg.tree.n_features
+    base = ht.init_state(cfg.tree)
+    trees = jax.tree.map(
+        lambda a: jnp.broadcast_to(a[None], (T,) + a.shape), base)
+    keys = jax.random.split(key, T + 1)
+    masks = jax.vmap(
+        functools.partial(_draw_mask, F=F, k=cfg.subspace_k()))(keys[1:])
+    return {
+        "trees": trees,
+        "feat_mask": masks,
+        "keys": jax.random.split(keys[0], T),
+        "err_win": stats.init((T,)),
+        "err_ewma": jnp.zeros((T,), jnp.float32),
+        "resets": jnp.zeros((T,), jnp.int32),
+    }
+
+
+def member_predictions(cfg: ForestConfig, state: ForestState,
+                       X: jax.Array) -> jax.Array:
+    """(T, B) f32 — every member's prediction for every row of X (B, F)."""
+    return jax.vmap(functools.partial(ht.predict, cfg.tree),
+                    in_axes=(0, None))(state["trees"], X)
+
+
+def vote_weights(cfg: ForestConfig, state: ForestState) -> jax.Array:
+    """(T,) f32 un-normalized member vote weights.
+
+    ``inverse_error`` weights a member by
+    ``(1 / (EWMA prequential MSE + eps)) ** vote_power``; members with no
+    error history yet (fresh after init or a drift reset) vote 0 so a
+    just-reset blank tree cannot drag the ensemble (an all-fresh forest
+    predicts 0 either way; :func:`predict` guards the 0/0).
+    """
+    T = state["err_ewma"].shape[0]
+    if cfg.vote == "mean":
+        return jnp.ones((T,), jnp.float32)
+    assert cfg.vote == "inverse_error", cfg.vote
+    seen = state["err_win"]["n"] > 0
+    return jnp.where(
+        seen, (1.0 / (state["err_ewma"] + 1e-6)) ** cfg.vote_power, 0.0)
+
+
+def _vote_combine(yhat, wts, axis_name):
+    """(T_local, B) member predictions + (T_local,) weights -> (B,) vote.
+
+    The single definition of the prediction reduce, shared by
+    :func:`predict` and the prequential error in :func:`update` so the
+    reported forest_mse always describes the predictor predict serves.
+    With ``axis_name`` (inside shard_map) the num/den psum pair is the
+    forest's only collective.
+    """
+    num = (wts[:, None] * yhat).sum(0)
+    den = wts.sum()
+    if axis_name is not None:
+        num, den = jax.lax.psum((num, den), axis_name)
+    return num / jnp.maximum(den, 1e-12)
+
+
+def predict(cfg: ForestConfig, state: ForestState, X: jax.Array,
+            axis_name: str | None = None) -> jax.Array:
+    """Forest prediction: the vote-weighted mean of member predictions.
+
+    X: (B, F) -> (B,) f32.  ``axis_name``: when the tree axis is split
+    over devices with ``shard_map``, pass the mesh axis name — the only
+    cross-tree communication in the whole forest is this one psum pair.
+    """
+    return _vote_combine(member_predictions(cfg, state, X),
+                         vote_weights(cfg, state), axis_name)
+
+
+def _fused_member_update(cfg: ForestConfig, trees, feat_mask, X, y, w):
+    """All T member updates as ONE flat pass over the PR-1 forest kernels.
+
+    A naive ``vmap(hoeffding.update)`` turns every segment-reduction and
+    scatter into a *batched* scatter, which XLA (CPU especially) lowers
+    poorly — measured ~4x slower than a python loop over trees.  Instead
+    the tree axis is folded into the table axis the kernels already
+    batch over: T trees x M nodes become one (T*M, F, C) forest with
+    global leaf ids ``t*M + leaf``, so absorb is ONE
+    :func:`repro.kernels.ops.forest_update`, the split query ONE
+    :func:`repro.kernels.ops.forest_best_splits` (both tree-count
+    agnostic on every backend), and only the cheap O(M) decision/scatter
+    stage (:func:`repro.core.hoeffding._apply_splits`) is vmapped.
+
+    trees: stacked TreeStates (T leading); w: (T, B) sample weights.
+    """
+    tcfg = cfg.tree
+    M, F = tcfg.max_nodes, tcfg.n_features
+    T = feat_mask.shape[0]
+    leaf = jax.vmap(lambda t: ht._route(t, X, tcfg.max_depth))(trees)
+
+    # global leaf ids fold the tree axis into the table axis
+    gl = (jnp.arange(T, dtype=leaf.dtype)[:, None] * M + leaf).reshape(-1)
+    y_rep = jnp.tile(y, T)
+    w_flat = w.reshape(-1)
+
+    # leaf target statistics: one flat segment reduction for all T trees
+    batch_leaf = jax.tree.map(
+        lambda a: a.reshape(T, M),
+        ht._segment_stats(y_rep, gl, T * M, w_flat))
+    trees = dict(trees,
+                 ystats=stats.merge(trees["ystats"], batch_leaf),
+                 seen=trees["seen"] + batch_leaf["n"])
+
+    # absorb: one fused QO update for every (tree, leaf, feature) table
+    flat = lambda a: a.reshape((T * M,) + a.shape[2:])
+    ao_y, ao_sum_x = kops.forest_update(
+        jax.tree.map(flat, trees["ao_y"]), flat(trees["ao_sum_x"]),
+        flat(trees["ao_radius"]), flat(trees["ao_origin"]),
+        gl, jnp.tile(X, (T, 1)), y_rep, w_flat,
+        backend=tcfg.split_backend)
+    unflat = lambda a: a.reshape((T, M) + a.shape[1:])
+    trees = dict(trees, ao_y=jax.tree.map(unflat, ao_y),
+                 ao_sum_x=unflat(ao_sum_x))
+
+    attempt = trees["is_leaf"] & (trees["seen"] >= tcfg.grace_period) \
+        & (trees["depth"] < tcfg.max_depth) \
+        & (trees["n_nodes"][:, None] + 1 < M)                   # (T, M)
+
+    def do(tr, att):
+        merit, thr = kops.forest_best_splits(
+            jax.tree.map(flat, tr["ao_y"]), flat(tr["ao_sum_x"]),
+            flat(tr["ao_radius"]), flat(tr["ao_origin"]),
+            att.reshape(-1), backend=tcfg.split_backend)
+        return jax.vmap(functools.partial(ht._apply_splits, tcfg))(
+            tr, merit.reshape(T, M, F), thr.reshape(T, M, F), att,
+            feat_mask)
+
+    return jax.lax.cond(attempt.any(), do, lambda tr, a: dict(tr),
+                        trees, attempt)
+
+
+def update(cfg: ForestConfig, state: ForestState, X: jax.Array,
+           y: jax.Array, axis_name: str | None = None):
+    """Learn one batch, test-then-train.
+
+    Evaluates every member on the incoming batch (prequential), folds the
+    batch into every member with fresh Poisson(λ) sample weights, advances
+    the per-member drift windows and resets the worst drifting member.
+
+    Returns ``(state, aux)`` with
+    ``aux = {"member_mse": (T,), "forest_mse": (), "drift": (T,) bool}``
+    — prequential (pre-update) errors of this batch.  The member updates
+    execute as one fused flat-forest pass (:func:`_fused_member_update`;
+    ``split_backend="oracle"`` falls back to ``vmap(hoeffding.update)``
+    as the correctness reference); with ``axis_name`` set (inside
+    ``shard_map``) only the forest_mse vote reduce communicates.
+    """
+    X = jnp.asarray(X, jnp.float32)
+    y = jnp.asarray(y, jnp.float32).reshape(-1)
+    B = y.shape[0]
+
+    # --- test: prequential member + forest errors on the raw stream ------
+    yhat = member_predictions(cfg, state, X)                   # (T, B)
+    member_mse = jnp.mean((yhat - y[None, :]) ** 2, axis=1)    # (T,)
+    fpred = _vote_combine(yhat, vote_weights(cfg, state), axis_name)
+    forest_mse = jnp.mean((fpred - y) ** 2)
+
+    # --- train: Poisson(λ) bagging weights, one fused member update ------
+    split = jax.vmap(functools.partial(jax.random.split, num=3))(
+        state["keys"])                                         # (T, 3, 2)
+    keys, wkeys, mkeys = split[:, 0], split[:, 1], split[:, 2]
+    cdf = jnp.asarray(_poisson_cdf(cfg.lam), jnp.float32)
+    w = jax.vmap(lambda k: _poisson_weights(k, cdf, (B,)))(wkeys)  # (T, B)
+    if cfg.tree.split_backend == "oracle":
+        trees = jax.vmap(functools.partial(ht.update, cfg.tree),
+                         in_axes=(0, None, None, 0, 0))(
+            state["trees"], X, y, w, state["feat_mask"])
+    else:
+        trees = _fused_member_update(cfg, state["trees"], state["feat_mask"],
+                                     X, y, w)
+
+    # --- drift: ADWIN-style short-vs-long window test per member ---------
+    # the short (EWMA) window is compared against the long window BEFORE
+    # this batch is folded in — once errors jump, the reference must not
+    # absorb the jump or the test chases its own tail and never fires.
+    # The long window decays (effective length 1/(1-drift_decay) batches)
+    # so the cold-start transient washes out of the reference.
+    first = state["err_win"]["n"] < 0.5
+    ewma = jnp.where(first, member_mse,
+                     (1.0 - cfg.drift_alpha) * state["err_ewma"]
+                     + cfg.drift_alpha * member_mse)
+    ref = state["err_win"]
+    sd = jnp.sqrt(jnp.maximum(stats.variance(ref), 1e-12))
+    signal = (ref["n"] >= cfg.drift_min_batches) \
+        & (ewma > ref["mean"] + cfg.drift_kappa * sd)
+    # swap at most the WORST signalling member per batch (per shard when
+    # the tree axis is sharded): staggered resets keep the forest's memory
+    worst = jnp.argmax(jnp.where(signal, ewma, -jnp.inf))
+    drift = signal & (jnp.arange(signal.shape[0]) == worst)
+    decayed = {"n": cfg.drift_decay * ref["n"], "mean": ref["mean"],
+               "m2": cfg.drift_decay * ref["m2"]}
+    observed = stats.observe(decayed, member_mse)
+    # a signalling member's reference FREEZES (no decay, no observe): if it
+    # wasn't this batch's worst it must keep its clean pre-drift reference
+    # so it can fire again next batch — otherwise the window absorbs the
+    # jump and simultaneous drifts beyond the first are never swapped
+    win = jax.tree.map(
+        lambda o, r: jnp.where(signal, r, o), observed, ref)
+
+    # --- swap: reset drifting members (fresh tree, subspace, window) -----
+    T = drift.shape[0]                   # local shard size under shard_map
+    fresh = jax.tree.map(
+        lambda a: jnp.broadcast_to(a[None], (T,) + a.shape),
+        ht.init_state(cfg.tree))
+
+    def swap(a, f):
+        return jnp.where(drift.reshape((T,) + (1,) * (a.ndim - 1)), f, a)
+
+    trees = jax.tree.map(swap, trees, fresh)
+    new_masks = jax.vmap(functools.partial(
+        _draw_mask, F=cfg.tree.n_features, k=cfg.subspace_k()))(mkeys)
+    state = {
+        "trees": trees,
+        "feat_mask": jnp.where(drift[:, None], new_masks, state["feat_mask"]),
+        "keys": keys,
+        "err_win": jax.tree.map(lambda a: jnp.where(drift, 0.0, a), win),
+        "err_ewma": jnp.where(drift, 0.0, ewma),
+        "resets": state["resets"] + drift.astype(jnp.int32),
+    }
+    return state, {"member_mse": member_mse, "forest_mse": forest_mse,
+                   "drift": drift}
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "batch_size"))
+def update_stream(cfg: ForestConfig, state: ForestState, X: jax.Array,
+                  y: jax.Array, batch_size: int = 256):
+    """Scan a whole stream through :func:`update` in ONE dispatch.
+
+    X: (N, F), y: (N,); rows beyond the last full batch are dropped.
+    Returns ``(state, trace)`` where ``trace["forest_mse"]`` is the
+    (n_batches,) prequential forest MSE and ``trace["member_mse"]`` the
+    (n_batches, T) per-member traces — the benchmark's acceptance data.
+    """
+    n = (X.shape[0] // batch_size) * batch_size
+    Xc = X[:n].reshape(-1, batch_size, X.shape[1])
+    yc = y.reshape(-1)[:n].reshape(-1, batch_size)
+
+    def body(s, xy):
+        s, aux = update(cfg, s, xy[0], xy[1])
+        return s, (aux["forest_mse"], aux["member_mse"])
+
+    state, (fmse, mmse) = jax.lax.scan(body, state, (Xc, yc))
+    return state, {"forest_mse": fmse, "member_mse": mmse}
+
+
+def n_leaves_per_tree(state: ForestState) -> jax.Array:
+    """(T,) i32 live-leaf count of every member (diagnostics)."""
+    return jax.vmap(ht.n_leaves)(state["trees"])

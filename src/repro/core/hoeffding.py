@@ -25,7 +25,10 @@ or when ``eps < tau`` (tie break).
 
 Functional API: ``init_state`` -> ``update`` (learn a batch) -> ``predict``;
 ``update_stream`` scans a whole stream through ``update`` in one dispatch.
-Forests: ``jax.vmap`` over a leading axis of states.
+``update`` takes optional per-instance sample weights and a per-tree
+feature-subspace mask; states vmap/shard over a leading tree axis, and
+:mod:`repro.core.forest` builds the online-bagged ensemble on top by
+folding that axis into the kernels' table axis (DESIGN.md §5).
 """
 from __future__ import annotations
 
@@ -61,6 +64,30 @@ class HTRConfig:
 
 
 def init_state(cfg: HTRConfig) -> TreeState:
+    """Empty single-root tree.
+
+    Returns a dict pytree (all fixed-capacity, so it vmaps/shards over a
+    leading tree axis — :mod:`repro.core.forest` relies on this):
+
+    =============  =============  ================================================
+    key            shape          meaning
+    =============  =============  ================================================
+    ``feature``    (M,) i32       split feature of internal nodes
+    ``threshold``  (M,) f32       split threshold (x <= thr goes left)
+    ``child``      (M, 2) i32     children ids, -1 for leaves
+    ``is_leaf``    (M,) bool      leaf mask (node 0 starts as the root leaf)
+    ``depth``      (M,) i32       node depth
+    ``ystats``     Stats (M,)     per-node target (n, mean, M2) — the predictor
+    ``ao_sum_x``   (M, F, C) f32  QO per-bin sum of x (prototype numerator)
+    ``ao_y``       Stats (M,F,C)  QO per-bin target statistics
+    ``ao_radius``  (M, F) f32     per-(node, feature) quantization radius
+    ``ao_origin``  (M, F) f32     value mapped to the middle bin
+    ``seen``       (M,) f32       weight mass since the last split attempt
+    ``n_nodes``    () i32         allocated node count
+    =============  =============  ================================================
+
+    with ``M = cfg.max_nodes``, ``F = cfg.n_features``, ``C = cfg.n_bins``.
+    """
     M, F, C = cfg.max_nodes, cfg.n_features, cfg.n_bins
     return {
         "feature": jnp.zeros((M,), jnp.int32),
@@ -92,25 +119,30 @@ def _route(state: TreeState, X: jax.Array, max_depth: int) -> jax.Array:
 
 
 def predict(cfg: HTRConfig, state: TreeState, X: jax.Array) -> jax.Array:
-    """Mean-of-leaf (centroid) prediction, the paper's §2 framing."""
+    """Mean-of-leaf (centroid) prediction, the paper's §2 framing.
+
+    X: (B, F) f32 — returns (B,) f32 leaf-mean predictions (0.0 from an
+    untrained root).
+    """
     leaf = _route(state, X, cfg.max_depth)
     return state["ystats"]["mean"][leaf]
 
 
-def _segment_stats(vals_y, seg, num):
-    """Exact per-segment (n, mean, M2) from a flat batch.
+def _segment_stats(vals_y, seg, num, w=None):
+    """Exact per-segment weighted (n, mean, M2) from a flat batch.
 
     M2 uses the two-pass residual form (residuals against the segment
     mean, gathered back per element) — the same robust formulation as
     :func:`repro.core.qo.update`, not the cancellation-prone
-    ``sum(y^2) - n*mean^2`` (paper §3).
+    ``sum(y^2) - n*mean^2`` (paper §3).  ``w`` defaults to unit weights;
+    a weight-0 element contributes nothing.
     """
-    w = jnp.ones_like(vals_y)
+    w = jnp.ones_like(vals_y) if w is None else w
     n = jax.ops.segment_sum(w, seg, num)
-    sy = jax.ops.segment_sum(vals_y, seg, num)
+    sy = jax.ops.segment_sum(w * vals_y, seg, num)
     safe = jnp.where(n > 0, n, 1.0)
     mean = jnp.where(n > 0, sy / safe, 0.0)
-    m2 = jax.ops.segment_sum((vals_y - mean[seg]) ** 2, seg, num)
+    m2 = jax.ops.segment_sum(w * (vals_y - mean[seg]) ** 2, seg, num)
     return {"n": n, "mean": mean, "m2": jnp.where(n > 0, m2, 0.0)}
 
 
@@ -118,7 +150,7 @@ def _segment_stats(vals_y, seg, num):
 # absorb stage
 # --------------------------------------------------------------------------
 
-def _absorb_oracle(cfg: HTRConfig, state: TreeState, leaf, X, y) -> TreeState:
+def _absorb_oracle(cfg: HTRConfig, state: TreeState, leaf, X, y, w) -> TreeState:
     """Seed path: four segment-scatter reductions over the flat M*F*C space
     (kept as the correctness oracle for :func:`kernels.ops.forest_update`)."""
     M, F, C = cfg.max_nodes, cfg.n_features, cfg.n_bins
@@ -127,21 +159,22 @@ def _absorb_oracle(cfg: HTRConfig, state: TreeState, leaf, X, y) -> TreeState:
     seg = (leaf[:, None] * F + jnp.arange(F)[None, :]) * C + bins
     seg = seg.reshape(-1)
     y_rep = jnp.repeat(y, F)
+    w_rep = jnp.repeat(w, F)
     x_flat = X.reshape(-1)
-    tile = _segment_stats(y_rep, seg, M * F * C)
+    tile = _segment_stats(y_rep, seg, M * F * C, w_rep)
     tile = jax.tree.map(lambda a: a.reshape(M, F, C), tile)
-    sum_x = jax.ops.segment_sum(x_flat, seg, M * F * C).reshape(M, F, C)
+    sum_x = jax.ops.segment_sum(w_rep * x_flat, seg, M * F * C).reshape(M, F, C)
     return dict(state,
                 ao_y=stats.merge(state["ao_y"], tile),
                 ao_sum_x=state["ao_sum_x"] + sum_x)
 
 
-def _absorb(cfg: HTRConfig, state: TreeState, leaf, X, y) -> TreeState:
+def _absorb(cfg: HTRConfig, state: TreeState, leaf, X, y, w) -> TreeState:
     if cfg.split_backend == "oracle":
-        return _absorb_oracle(cfg, state, leaf, X, y)
+        return _absorb_oracle(cfg, state, leaf, X, y, w)
     ao_y, ao_sum_x = kops.forest_update(
         state["ao_y"], state["ao_sum_x"], state["ao_radius"],
-        state["ao_origin"], leaf, X, y, backend=cfg.split_backend)
+        state["ao_origin"], leaf, X, y, w, backend=cfg.split_backend)
     return dict(state, ao_y=ao_y, ao_sum_x=ao_sum_x)
 
 
@@ -154,15 +187,20 @@ def _query_oracle(state: TreeState, attempt) -> Tuple[jax.Array, jax.Array]:
     return kref.forest_query_ref(state["ao_y"], state["ao_sum_x"], attempt)
 
 
-def _split_decision(cfg: HTRConfig, state: TreeState, merit, thr_all, attempt):
+def _split_decision(cfg: HTRConfig, state: TreeState, merit, thr_all, attempt,
+                    feat_mask=None):
     """Hoeffding-bound ratio test + vectorized child allocation.
 
     Shared by both attempt engines so the decision math can never
     desynchronize between the kernel pipeline and the oracle reference.
+    ``feat_mask``: optional (F,) bool random-subspace mask — features
+    outside it can never win a split (their merit is forced to -inf).
     Returns (best_f, best_c, can, lidx, c0, c1, c0i, c1i); index M means
     'dropped scatter'.
     """
     M = cfg.max_nodes
+    if feat_mask is not None:
+        merit = jnp.where(feat_mask[None, :], merit, -jnp.inf)
     top2 = jax.lax.top_k(merit, 2)[0]                       # (M, 2)
     best_f = jnp.argmax(merit, axis=1)                      # (M,)
     best_c = thr_all[jnp.arange(M), best_f]
@@ -199,14 +237,15 @@ def _child_radius(cfg: HTRConfig, state: TreeState):
     return child_r, mean_x
 
 
-def _do_attempts_oracle(cfg: HTRConfig, state: TreeState, attempt) -> TreeState:
+def _do_attempts_oracle(cfg: HTRConfig, state: TreeState, attempt,
+                        feat_mask=None) -> TreeState:
     """The seed engine, preserved as the correctness reference: per-table
     scans, log-depth merge/subtract child recovery, one scatter per field.
     benchmarks/tree.py races it against :func:`_do_attempts`."""
     M = cfg.max_nodes
     merit, thr_all = _query_oracle(state, attempt)
     best_f, best_c, can, lidx, c0, c1, c0i, c1i = _split_decision(
-        cfg, state, merit, thr_all, attempt)
+        cfg, state, merit, thr_all, attempt, feat_mask)
 
     st = dict(state)
     st["feature"] = st["feature"].at[lidx].set(best_f, mode="drop")
@@ -252,13 +291,16 @@ def _do_attempts_oracle(cfg: HTRConfig, state: TreeState, attempt) -> TreeState:
     return st
 
 
-def _do_attempts(cfg: HTRConfig, state: TreeState, attempt) -> TreeState:
+def _apply_splits(cfg: HTRConfig, state: TreeState, merit, thr_all, attempt,
+                  feat_mask=None) -> TreeState:
+    """Decision + scatter stage of the kernel attempt engine, taking the
+    already-computed (M, F) query results.  Factored out of
+    :func:`_do_attempts` so the forest layer can run ONE flat query over
+    all T*M tables and vmap only this cheap per-tree apply (DESIGN.md §5).
+    """
     M = cfg.max_nodes
-    merit, thr_all = kops.forest_best_splits(
-        state["ao_y"], state["ao_sum_x"], state["ao_radius"],
-        state["ao_origin"], attempt, backend=cfg.split_backend)
     best_f, best_c, can, lidx, c0, c1, c0i, c1i = _split_decision(
-        cfg, state, merit, thr_all, attempt)
+        cfg, state, merit, thr_all, attempt, feat_mask)
     kids = jnp.concatenate([c0i, c1i])             # (2M,) fused child scatter
 
     st = dict(state)
@@ -315,27 +357,55 @@ def _do_attempts(cfg: HTRConfig, state: TreeState, attempt) -> TreeState:
     return st
 
 
+def _do_attempts(cfg: HTRConfig, state: TreeState, attempt,
+                 feat_mask=None) -> TreeState:
+    merit, thr_all = kops.forest_best_splits(
+        state["ao_y"], state["ao_sum_x"], state["ao_radius"],
+        state["ao_origin"], attempt, backend=cfg.split_backend)
+    return _apply_splits(cfg, state, merit, thr_all, attempt, feat_mask)
+
+
 # --------------------------------------------------------------------------
 # update = route -> absorb -> attempt
 # --------------------------------------------------------------------------
 
-def update(cfg: HTRConfig, state: TreeState, X: jax.Array,
-           y: jax.Array) -> TreeState:
-    """Learn one batch: route, absorb statistics, attempt splits."""
+def update(cfg: HTRConfig, state: TreeState, X: jax.Array, y: jax.Array,
+           w: jax.Array | None = None,
+           feat_mask: jax.Array | None = None) -> TreeState:
+    """Learn one batch: route, absorb statistics, attempt splits.
+
+    Args:
+      cfg:   static :class:`HTRConfig` (jit with it as a static arg).
+      state: tree pytree from :func:`init_state`.
+      X:     (B, F) f32 features.
+      y:     (B,) f32 targets.
+      w:     optional (B,) f32 per-instance sample weights (default 1.0).
+        Every statistic in the tree — leaf predictors, grace-period mass,
+        QO bin stats — accumulates ``w`` instead of 1, so a weight-0 row
+        is a no-op and integer weight k equals k repeated unit updates
+        (Poisson online bagging, :mod:`repro.core.forest`).
+      feat_mask: optional (F,) bool random-subspace mask; features outside
+        it are still observed (their QO tables fill) but can never be
+        chosen as a split feature.
+
+    Returns the new TreeState (same shapes; purely functional).
+    """
     M = cfg.max_nodes
     X = jnp.asarray(X, jnp.float32)
     y = jnp.asarray(y, jnp.float32).reshape(-1)
+    w = jnp.ones_like(y) if w is None \
+        else jnp.asarray(w, jnp.float32).reshape(-1)
 
     leaf = _route(state, X, cfg.max_depth)                      # (B,)
 
     # --- leaf target statistics (predictor + split-variance source) ------
-    batch_leaf = _segment_stats(y, leaf, M)
+    batch_leaf = _segment_stats(y, leaf, M, w)
     state = dict(state,
                  ystats=stats.merge(state["ystats"], batch_leaf),
                  seen=state["seen"] + batch_leaf["n"])
 
     # --- absorb: one fused QO update for every (leaf, feature) table -----
-    state = _absorb(cfg, state, leaf, X, y)
+    state = _absorb(cfg, state, leaf, X, y, w)
 
     # --- attempt ----------------------------------------------------------
     attempt = state["is_leaf"] & (state["seen"] >= cfg.grace_period) \
@@ -349,35 +419,44 @@ def update(cfg: HTRConfig, state: TreeState, X: jax.Array,
         attempt = attempt & (state["n_nodes"] + 1 < M)
         do = _do_attempts
 
-    return jax.lax.cond(attempt.any(), functools.partial(do, cfg),
-                        lambda s, a: dict(s), state, attempt)
+    return jax.lax.cond(
+        attempt.any(), functools.partial(do, cfg, feat_mask=feat_mask),
+        lambda s, a: dict(s), state, attempt)
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "batch_size"))
 def update_stream(cfg: HTRConfig, state: TreeState, X: jax.Array,
-                  y: jax.Array, batch_size: int = 256) -> TreeState:
+                  y: jax.Array, w: jax.Array | None = None,
+                  batch_size: int = 256) -> TreeState:
     """Scan a whole stream through ``update`` in ONE dispatch.
 
-    Rows beyond the last full batch are dropped (matching a bounded-batch
-    streaming consumer); call ``update`` directly for the remainder.
+    X: (N, F), y: (N,), optional w: (N,) sample weights.  Rows beyond the
+    last full batch are dropped (matching a bounded-batch streaming
+    consumer); call ``update`` directly for the remainder.
     """
     n = (X.shape[0] // batch_size) * batch_size
     Xc = X[:n].reshape(-1, batch_size, X.shape[1])
     yc = y.reshape(-1)[:n].reshape(-1, batch_size)
+    wc = None if w is None else \
+        jnp.asarray(w, jnp.float32).reshape(-1)[:n].reshape(-1, batch_size)
 
-    def body(s, xy):
-        return update(cfg, s, xy[0], xy[1]), None
+    def body(s, xyw):
+        return update(cfg, s, xyw[0], xyw[1], xyw[2]), None
 
-    state, _ = jax.lax.scan(body, state, (Xc, yc))
+    state, _ = jax.lax.scan(
+        body, state,
+        (Xc, yc, jnp.ones_like(yc) if wc is None else wc))
     return state
 
 
 def n_leaves(state: TreeState) -> jax.Array:
+    """Number of live leaves (allocated nodes with ``is_leaf`` set) — () i32."""
     active = jnp.arange(state["is_leaf"].shape[0]) < state["n_nodes"]
     return (state["is_leaf"] & active).sum()
 
 
 def depth_histogram(state: TreeState) -> jax.Array:
+    """(32,) i32 count of live leaves per depth (diagnostics)."""
     active = jnp.arange(state["is_leaf"].shape[0]) < state["n_nodes"]
     return jax.ops.segment_sum(
         (state["is_leaf"] & active).astype(jnp.int32),

@@ -24,6 +24,13 @@ __all__ = ["init", "update", "best_split", "n_slots"]
 
 def init(capacity: int, n_targets: int, radius: float,
          origin: float = 0.0) -> MTQOTable:
+    """Empty multi-target QO table.
+
+    capacity: number of bins C; n_targets: targets per instance T;
+    radius/origin: quantization as in :func:`repro.core.qo.init`.
+    Returns a dict pytree with per-bin ``sum_x`` (C,) and target stats
+    ``y`` of shape (C, T).
+    """
     return {
         "radius": jnp.asarray(radius, jnp.float32),
         "origin": jnp.asarray(origin, jnp.float32),
@@ -39,7 +46,12 @@ def _bin_ids(table, x):
 
 
 def update(table: MTQOTable, x, Y) -> MTQOTable:
-    """x: (n,), Y: (n, T) — one quantized insert per instance, all targets."""
+    """Batched insert: one quantized bin per instance, all T targets.
+
+    x: (n,) f32 feature values; Y: (n, T) f32 targets.  Returns a new
+    table; per-bin (n, mean, M2) update as in the single-target
+    :func:`repro.core.qo.update`, broadcast across the target axis.
+    """
     x = jnp.asarray(x, jnp.float32).reshape(-1)
     Y = jnp.asarray(Y, jnp.float32)
     cap, T = table["y"]["n"].shape
@@ -62,7 +74,12 @@ def update(table: MTQOTable, x, Y) -> MTQOTable:
 
 
 def best_split(table: MTQOTable) -> SplitResult:
-    """Mean-VR-across-targets split (multi-target Algorithm 2)."""
+    """Mean-VR-across-targets split (multi-target Algorithm 2).
+
+    Per-target VR is normalized by that target's whole-sample variance
+    (Kocev et al.) before averaging, so large-scale targets don't
+    dominate.  Returns a scalar :class:`repro.core.qo.SplitResult`.
+    """
     ybins = table["y"]                                             # (C, T)
     occ = ybins["n"][:, 0] > 0
     cap = occ.shape[0]
@@ -96,4 +113,5 @@ def best_split(table: MTQOTable) -> SplitResult:
 
 
 def n_slots(table: MTQOTable) -> jax.Array:
+    """|H| — number of occupied bins (the paper's memory metric), () i32."""
     return (table["y"]["n"][:, 0] > 0).sum()

@@ -67,9 +67,18 @@ def _bin_ids(table: QOTable, x: jax.Array) -> jax.Array:
 def update(table: QOTable, x: jax.Array, y: jax.Array, w=None) -> QOTable:
     """Fold a batch of observations into the table (paper Algorithm 1).
 
-    Equivalent to looping Algorithm 1 over the tile, but executed as one
-    segment-reduction: per bin we build exact tile statistics and merge
-    them into the stored statistics with Chan's formulas.
+    Args:
+      table: QO dict from :func:`init` (bins of capacity C).
+      x: (B,) f32 feature values (any shape; flattened).
+      y: (B,) f32 targets.
+      w: optional (B,) f32 sample weights (default 1).  All bin statistics
+        accumulate ``w`` — weight-0 rows vanish, integer weight k equals
+        k repeated unit inserts (the online-bagging contract).
+
+    Returns a new table of the same shapes.  Equivalent to looping
+    Algorithm 1 over the tile, but executed as one segment-reduction:
+    per bin we build exact tile statistics and merge them into the stored
+    statistics with Chan's formulas.
     """
     x = jnp.asarray(x, jnp.float32).reshape(-1)
     y = jnp.asarray(y, jnp.float32).reshape(-1)
@@ -117,6 +126,12 @@ def best_split(table: QOTable) -> SplitResult:
     Candidate cut points are midpoints between prototypes of consecutive
     occupied bins; VR is computed from the prefix statistics (left side)
     and their complement obtained with the paper's subtraction (Eqs. 6-7).
+
+    Returns a :class:`SplitResult` of scalars: ``threshold`` (f32 cut
+    point), ``merit`` (f32 VR, 0 when invalid) and ``valid`` (bool —
+    False when fewer than two occupied bins exist).  vmap over a leading
+    table axis for many tables at once (or use
+    :func:`repro.kernels.ops.forest_best_splits`).
     """
     ybins = table["y"]
     occ = ybins["n"] > 0
@@ -159,7 +174,13 @@ def best_split(table: QOTable) -> SplitResult:
 
 
 def merge_tables(a: QOTable, b: QOTable) -> QOTable:
-    """Merge two same-shape QO tables (distributed estimation, DESIGN §4)."""
+    """Merge two same-capacity QO tables (distributed estimation, DESIGN §4).
+
+    Associative + commutative (inherited from the Chan merge), so D
+    shard-local tables reduce to exactly the single-stream table in any
+    order; radius/origin are taken from ``a`` (shards must quantize
+    identically for the merge to be meaningful).
+    """
     return {
         "radius": a["radius"],
         "origin": a["origin"],

@@ -72,13 +72,20 @@ def generate(cfg: SynthConfig) -> Tuple[np.ndarray, np.ndarray]:
     return x.astype(np.float32), y.astype(np.float32)
 
 
+def piecewise_target(X: np.ndarray, shift=0.0) -> np.ndarray:
+    """The shared piecewise-constant tree target; ``shift`` moves the root
+    split point (the concept-drift knob used by the forest benchmark and
+    the streaming examples — ONE definition so they stay in lockstep)."""
+    F = X.shape[1]
+    return np.where(X[:, 0] <= shift,
+                    np.where(X[:, 1 % F] <= 0.5, 1.0, 5.0),
+                    np.where(X[:, 2 % F] <= -0.2, 9.0, 13.0))
+
+
 def piecewise_regression(n: int, n_features: int = 4, seed: int = 0,
                          noise: float = 0.1):
     """Multivariate piecewise-constant target for tree e2e tests."""
     rng = np.random.default_rng(seed)
     X = rng.normal(0, 1, (n, n_features)).astype(np.float32)
-    y = np.where(X[:, 0] <= 0.0,
-                 np.where(X[:, 1 % n_features] <= 0.5, 1.0, 5.0),
-                 np.where(X[:, 2 % n_features] <= -0.2, 9.0, 13.0))
-    y = (y + noise * rng.normal(0, 1, n)).astype(np.float32)
+    y = (piecewise_target(X) + noise * rng.normal(0, 1, n)).astype(np.float32)
     return X, y

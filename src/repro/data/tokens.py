@@ -3,7 +3,7 @@
 Stateless index-based sampling: batch ``i`` is a pure function of
 (seed, i), so restart-after-preemption resumes the stream exactly by
 skipping to the checkpointed step — no data-loader state to snapshot
-(DESIGN.md §6, fault tolerance).
+(DESIGN.md §7, fault tolerance).
 
 The stream is a Zipf-ish unigram mixture with a Markov flavour so that a
 model can actually reduce loss on it (used by the e2e training example).

@@ -39,6 +39,8 @@ __all__ = [
 
 
 def default_interpret() -> bool:
+    """True off-TPU: single-table kernels run under the Pallas interpreter
+    unless the caller forces compiled mode."""
     return jax.default_backend() != "tpu"
 
 
@@ -61,7 +63,13 @@ def _pad_to(arr, mult, fill=0.0):
 @functools.partial(jax.jit, static_argnames=("tile", "interpret"))
 def qo_update(table: qo_lib.QOTable, x, y, w=None, *, tile: int = 1024,
               interpret: bool | None = None) -> qo_lib.QOTable:
-    """Kernel-backed equivalent of :func:`repro.core.qo.update`."""
+    """Kernel-backed equivalent of :func:`repro.core.qo.update`.
+
+    table: dict QO table (capacity C); x/y: (B,) f32 observations;
+    w: optional (B,) f32 sample weights (default 1, weight-0 rows vanish);
+    tile: batch tile streamed through VMEM per grid step.  Returns the
+    merged table (same shapes).
+    """
     interpret = default_interpret() if interpret is None else interpret
     x = jnp.asarray(x, jnp.float32).reshape(-1)
     y = jnp.asarray(y, jnp.float32).reshape(-1)
@@ -78,7 +86,11 @@ def qo_update(table: qo_lib.QOTable, x, y, w=None, *, tile: int = 1024,
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def qo_best_split(table: qo_lib.QOTable, *,
                   interpret: bool | None = None) -> qo_lib.SplitResult:
-    """Kernel-backed equivalent of :func:`repro.core.qo.best_split`."""
+    """Kernel-backed equivalent of :func:`repro.core.qo.best_split`.
+
+    Returns a scalar :class:`repro.core.qo.SplitResult` (threshold, VR
+    merit, validity) evaluated for all C boundaries in one pass.
+    """
     interpret = default_interpret() if interpret is None else interpret
     dense, _ = _ref.pack_table(table)
     out = qo_query_pallas(dense, interpret=interpret)
@@ -97,7 +109,12 @@ def qo_best_split(table: qo_lib.QOTable, *,
 # --------------------------------------------------------------------------
 
 def forest_bin_ids(ao_radius, ao_origin, leaf, X, n_bins: int) -> jax.Array:
-    """(B, F) bin ids of each row in its routed leaf's per-feature tables."""
+    """Quantize each routed row into its leaf's per-feature tables.
+
+    ao_radius/ao_origin: (M, F) per-(leaf, feature) quantization; leaf:
+    (B,) i32 routed leaf ids; X: (B, F) f32.  Returns (B, F) i32 bin ids
+    clipped into [0, n_bins).
+    """
     r = ao_radius[leaf]                     # (B, F)
     o = ao_origin[leaf]
     h = jnp.floor((X - o) / r).astype(jnp.int32) + n_bins // 2
@@ -142,7 +159,11 @@ def forest_update(ao_y, ao_sum_x, ao_radius, ao_origin, leaf, X, y, w=None, *,
     """Absorb a routed batch into every (leaf, feature) QO table.
 
     ao_y: Stats dict of (M, F, C); ao_sum_x: (M, F, C); ao_radius/ao_origin:
-    (M, F); leaf: (B,) int32 routed leaf ids; X: (B, F); y: (B,).
+    (M, F); leaf: (B,) int32 routed leaf ids; X: (B, F); y: (B,);
+    w: optional (B,) f32 sample weights (default 1) — every accumulated
+    statistic carries w, so weight-0 rows vanish and integer weight k
+    equals k repeated unit rows (the online-bagging contract,
+    property-tested in tests/test_weighted.py).
     Returns the merged (ao_y, ao_sum_x).
 
     Deliberately NOT jitted: the tree's ``update`` traces it inline so XLA

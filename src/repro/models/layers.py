@@ -1,7 +1,7 @@
 """Transformer building blocks, written pjit-first.
 
 Everything here is a pure function over param pytrees.  Design points that
-matter at 512+ chips (DESIGN.md §6):
+matter at 512+ chips (DESIGN.md §7):
 
 * attention is **chunked** over the KV axis with an online-softmax scan, so
   the S x S logits tensor is never materialized (required for the 32k

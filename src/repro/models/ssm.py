@@ -6,7 +6,7 @@ associative scan, the chunk's outputs y = <h, C> are emitted immediately,
 and only the carried state (B, ..., N) crosses chunk boundaries.  Peak
 memory is therefore O(B * chunk * d_inner * N) rather than
 O(B * S * d_inner * N) — what makes the 32k prefill and 500k decode shapes
-feasible (DESIGN.md §5).
+feasible (DESIGN.md §6).
 
 Decode is the exact recurrence: one step, O(1) per token — the reason the
 SSM/hybrid archs are the ones that run ``long_500k``.
@@ -160,7 +160,7 @@ def mamba1(p, x, cfg, cache=None, chunk=128):
 def mamba2_params(key, cfg):
     """Separate projections per component (z / x / B / C / dt) so each can
     carry its own PartitionSpec — the fused (d, 2di+2N+nh) projection has
-    shard-misaligned split points on a 16-way model axis (DESIGN.md §6)."""
+    shard-misaligned split points on a 16-way model axis (DESIGN.md §7)."""
     d, di, N = cfg.d_model, cfg.d_inner, cfg.ssm_state
     nh = di // cfg.ssm_head_dim
     ks = jax.random.split(key, 7)

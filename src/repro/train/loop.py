@@ -1,6 +1,6 @@
 """Fault-tolerant training driver.
 
-Features (DESIGN.md §6):
+Features (DESIGN.md §7):
   * auto-resume from the latest checkpoint (atomic LATEST pointer);
   * periodic async checkpointing (serialization overlaps training);
   * preemption handling: SIGTERM/SIGINT triggers a final blocking save;

@@ -1,6 +1,7 @@
-"""PartitionSpec rules for params, optimizer state, batches and caches.
+"""PartitionSpec rules for params, optimizer state, batches, caches — and
+the tree-axis sharding of the QO Hoeffding forest (DESIGN.md §5).
 
-Strategy (DESIGN.md §6): TP over the 16-way "model" axis + FSDP over the
+Strategy (DESIGN.md §7): TP over the 16-way "model" axis + FSDP over the
 data axes ("pod","data") — required for grok-1-314b, whose optimizer state
 would otherwise need 235 GB/chip.  Rules are name+shape based over the
 param pytree; every rule falls back to replication when a dimension does
@@ -223,6 +224,65 @@ def cache_specs(cfg, batch: int, mesh: Mesh, cache_shapes):
 def opt_specs(pspecs):
     """Optimizer state shards exactly like params (m, v) + scalar step."""
     return {"m": pspecs, "v": pspecs, "step": P()}
+
+
+# --------------------------------------------------------------------------
+# Hoeffding-forest tree-axis sharding (DESIGN.md §5)
+# --------------------------------------------------------------------------
+
+def forest_state_specs(state, axis="data"):
+    """PartitionSpec pytree sharding the forest over its tree axis.
+
+    Every leaf of a :mod:`repro.core.forest` state carries the tree axis
+    first (the module's layout invariant), so the rule is uniform:
+    ``P(axis, None, ...)``.  ``state`` may be a real pytree or the
+    ``jax.eval_shape`` abstraction of one.
+    """
+    return jax.tree.map(
+        lambda a: P(axis, *([None] * (a.ndim - 1))), state)
+
+
+def build_sharded_forest(fcfg, mesh: Mesh, axis: str = "data"):
+    """jit'd ``(update_fn, predict_fn)`` with T trees spread over ``axis``.
+
+    ``update_fn(state, X, y) -> (state, aux)`` and
+    ``predict_fn(state, X) -> (B,)`` are ``shard_map`` wrappers around
+    :func:`repro.core.forest.update` / ``predict``: each device owns
+    ``T / mesh.shape[axis]`` member trees (T must divide) and runs the
+    identical vmapped member program on its shard; the ONLY cross-device
+    traffic is the two-scalar psum pair of the prediction vote reduce
+    (``axis_name=axis`` inside the mapped body).  Batches are replicated —
+    every member sees the whole stream, exactly like the single-host
+    forest, so sharded and unsharded training produce identical forests
+    while no drift swap fires (tests pin this).  The one intentional
+    divergence: the worst-signalling-member swap is resolved per SHARD,
+    so under simultaneous drift a D-way sharded forest may reset up to D
+    members per batch where the single-host forest resets one.
+    """
+    from jax.experimental.shard_map import shard_map
+
+    from repro.core import forest as fr
+
+    assert fcfg.n_trees % mesh.shape[axis] == 0, \
+        (fcfg.n_trees, mesh.shape[axis])
+    abstract = jax.eval_shape(
+        lambda: fr.init_forest(fcfg, jax.random.PRNGKey(0)))
+    sspec = forest_state_specs(abstract, axis)
+    aux_spec = {"member_mse": P(axis), "forest_mse": P(),
+                "drift": P(axis)}
+
+    # check_rep=False: the member update routes with fori_loop (lowered
+    # to `while`, which has no replication rule in this jax); the P()
+    # outputs are replicated by construction (psum)
+    upd = shard_map(
+        lambda s, X, y: fr.update(fcfg, s, X, y, axis_name=axis),
+        mesh=mesh, in_specs=(sspec, P(None, None), P(None)),
+        out_specs=(sspec, aux_spec), check_rep=False)
+    prd = shard_map(
+        lambda s, X: fr.predict(fcfg, s, X, axis_name=axis),
+        mesh=mesh, in_specs=(sspec, P(None, None)), out_specs=P(None),
+        check_rep=False)
+    return jax.jit(upd), jax.jit(prd)
 
 
 def to_shardings(mesh, spec_tree):

@@ -2,6 +2,19 @@
 import numpy as np
 
 
+def repeat_by_weights(w, *arrays):
+    """Expand integer sample weights into repeated unit-weight rows.
+
+    ``w``: (B,) non-negative ints.  Each of ``arrays`` (leading dim B) is
+    repeated row-wise w[i] times — the bagging identity the weighted
+    kernels must satisfy: absorbing (row, weight w) must equal absorbing
+    w copies of the row at weight 1 (weight-0 rows vanish).
+    """
+    w = np.asarray(w, np.int64)
+    idx = np.repeat(np.arange(len(w)), w)
+    return tuple(np.asarray(a)[idx] for a in arrays)
+
+
 def exact_best_split(x, y):
     """Exhaustive batch VR maximization (the batch-DT oracle)."""
     order = np.argsort(x, kind="stable")

@@ -1,0 +1,165 @@
+"""Online-bagged QO Hoeffding forest: growth, diversity, drift, sharding."""
+import functools
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import forest as fr
+from repro.core import hoeffding as ht
+from repro.data import synth
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _small_cfg(**kw):
+    tree = ht.HTRConfig(n_features=4, max_nodes=31, n_bins=32,
+                        grace_period=200, max_depth=6, r0=0.25)
+    return fr.ForestConfig(tree=tree, **kw)
+
+
+def test_forest_learns_and_beats_mean_predictor():
+    cfg = _small_cfg(n_trees=4)
+    state = fr.init_forest(cfg, jax.random.PRNGKey(0))
+    X, y = synth.piecewise_regression(6000, n_features=4, seed=11)
+    state, trace = fr.update_stream(cfg, state, jnp.array(X), jnp.array(y))
+    Xt, yt = synth.piecewise_regression(2000, n_features=4, seed=101)
+    pred = np.asarray(fr.predict(cfg, state, jnp.array(Xt)))
+    mse = float(np.mean((pred - yt) ** 2))
+    assert mse < 0.25 * float(np.var(yt)), mse
+    assert (np.asarray(fr.n_leaves_per_tree(state)) > 1).all()
+    # prequential trace improves over the stream
+    f = np.asarray(trace["forest_mse"])
+    assert f[-3:].mean() < f[:3].mean()
+
+
+def test_bagging_and_subspaces_decorrelate_members():
+    """Poisson weights + random subspaces must yield distinct members."""
+    cfg = _small_cfg(n_trees=6, subspace=0.5)
+    state = fr.init_forest(cfg, jax.random.PRNGKey(1))
+    masks = np.asarray(state["feat_mask"])
+    assert masks.sum(1).min() == cfg.subspace_k()
+    assert len({tuple(m) for m in masks}) > 1, "identical subspaces"
+    X, y = synth.piecewise_regression(5000, n_features=4, seed=3)
+    state, _ = fr.update_stream(cfg, state, jnp.array(X), jnp.array(y))
+    yhat = np.asarray(fr.member_predictions(cfg, state, jnp.array(X[:256])))
+    spread = yhat.std(axis=0).mean()
+    assert spread > 1e-3, "members collapsed to one predictor"
+
+
+def test_forest_update_stream_matches_python_loop():
+    """The one-dispatch scan driver == per-batch python loop (same keys)."""
+    cfg = _small_cfg(n_trees=3)
+    X, y = synth.piecewise_regression(2048, n_features=4, seed=4)
+    s_loop = fr.init_forest(cfg, jax.random.PRNGKey(2))
+    upd = jax.jit(functools.partial(fr.update, cfg))
+    for i in range(0, 2048, 256):
+        s_loop, _ = upd(s_loop, jnp.array(X[i:i + 256]),
+                        jnp.array(y[i:i + 256]))
+    s_scan, _ = fr.update_stream(cfg, fr.init_forest(cfg, jax.random.PRNGKey(2)),
+                                 jnp.array(X), jnp.array(y), batch_size=256)
+    np.testing.assert_array_equal(np.asarray(s_loop["trees"]["n_nodes"]),
+                                  np.asarray(s_scan["trees"]["n_nodes"]))
+    np.testing.assert_allclose(
+        np.asarray(s_loop["trees"]["ystats"]["mean"]),
+        np.asarray(s_scan["trees"]["ystats"]["mean"]), rtol=1e-5, atol=1e-5)
+
+
+def test_fused_forest_matches_oracle_member_updates():
+    """The flat (T*M)-table fused update == vmap of the seed oracle engine
+    (same PRNG keys -> same Poisson weights -> same forests)."""
+    X, y = synth.piecewise_regression(4096, n_features=3, seed=9)
+    states = {}
+    for backend in ("jnp", "oracle"):
+        tree = ht.HTRConfig(n_features=3, max_nodes=31, n_bins=32,
+                            grace_period=200, max_depth=6, r0=0.3,
+                            split_backend=backend)
+        cfg = fr.ForestConfig(tree=tree, n_trees=3)
+        s = fr.init_forest(cfg, jax.random.PRNGKey(8))
+        s, _ = fr.update_stream(cfg, s, jnp.array(X), jnp.array(y))
+        states[backend] = (cfg, s)
+    cfg_j, s_j = states["jnp"]
+    cfg_o, s_o = states["oracle"]
+    np.testing.assert_array_equal(np.asarray(s_j["trees"]["n_nodes"]),
+                                  np.asarray(s_o["trees"]["n_nodes"]))
+    Xt, yt = synth.piecewise_regression(1024, n_features=3, seed=99)
+    p_j = np.asarray(fr.predict(cfg_j, s_j, jnp.array(Xt)))
+    p_o = np.asarray(fr.predict(cfg_o, s_o, jnp.array(Xt)))
+    mse_j = float(np.mean((p_j - yt) ** 2))
+    mse_o = float(np.mean((p_o - yt) ** 2))
+    assert abs(mse_j - mse_o) <= 0.01 * max(mse_o, 1e-9), (mse_j, mse_o)
+
+
+def test_drift_resets_worst_member():
+    """An abrupt target shift must trip the ADWIN-style window and reset
+    members (fresh tree, fresh subspace, window restarted)."""
+    # NB: min_batches must stay below the decayed window's asymptotic
+    # length 1/(1 - drift_decay) or the detector never arms
+    cfg = _small_cfg(n_trees=4, drift_min_batches=8, drift_kappa=3.0)
+    state = fr.init_forest(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    upd = jax.jit(functools.partial(fr.update, cfg))
+
+    def stream(shift, steps):
+        nonlocal state
+        drifted = 0
+        for _ in range(steps):
+            X = rng.normal(0, 1, (256, 4)).astype(np.float32)
+            y = (np.where(X[:, 0] <= 0, 1.0, 6.0) + shift
+                 + 0.1 * rng.normal(0, 1, 256)).astype(np.float32)
+            state, aux = upd(state, jnp.array(X), jnp.array(y))
+            drifted += int(np.asarray(aux["drift"]).sum())
+        return drifted
+
+    assert stream(0.0, 25) == 0, "stationary phase must not trip the detector"
+    n_before = np.asarray(state["trees"]["n_nodes"]).copy()
+    assert (n_before > 1).all()
+    drifted = stream(40.0, 15)
+    assert drifted > 0, "abrupt drift never detected"
+    assert int(np.asarray(state["resets"]).sum()) == drifted
+
+
+def test_sharded_forest_matches_vmapped():
+    """shard_map over the tree axis == single-device vmap (subprocess with
+    forced host devices, same idiom as test_sharding)."""
+    code = """
+    import functools, jax, jax.numpy as jnp, numpy as np
+    from repro.core import forest as fr, hoeffding as ht
+    from repro.data import synth
+    from repro.train import sharding as sh
+    from repro.launch.mesh import make_mesh_auto
+
+    tree = ht.HTRConfig(n_features=4, max_nodes=31, n_bins=32,
+                        grace_period=200, max_depth=6, r0=0.25)
+    cfg = fr.ForestConfig(tree=tree, n_trees=8)
+    X, y = synth.piecewise_regression(3072, n_features=4, seed=7)
+    mesh = make_mesh_auto((4,), ("data",))
+    upd, prd = sh.build_sharded_forest(cfg, mesh, "data")
+
+    s_ref = fr.init_forest(cfg, jax.random.PRNGKey(3))
+    s_shd = jax.device_put(
+        s_ref, sh.to_shardings(mesh, sh.forest_state_specs(s_ref, "data")))
+    upd_ref = jax.jit(functools.partial(fr.update, cfg))
+    for i in range(0, 3072, 256):
+        xb, yb = jnp.array(X[i:i + 256]), jnp.array(y[i:i + 256])
+        s_ref, aux_r = upd_ref(s_ref, xb, yb)
+        s_shd, aux_s = upd(s_shd, xb, yb)
+    assert (np.asarray(s_ref["trees"]["n_nodes"])
+            == np.asarray(s_shd["trees"]["n_nodes"])).all()
+    p_ref = np.asarray(fr.predict(cfg, s_ref, jnp.array(X[:512])))
+    p_shd = np.asarray(prd(s_shd, jnp.array(X[:512])))
+    assert float(np.abs(p_ref - p_shd).max()) < 1e-4
+    assert abs(float(aux_r["forest_mse"]) - float(aux_s["forest_mse"])) < 1e-5
+    print("SHARDED_OK")
+    """
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=4",
+               PYTHONPATH=SRC)
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env, timeout=600)
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "SHARDED_OK" in out.stdout

@@ -1,0 +1,167 @@
+"""Weighted-absorption algebra: the online-bagging contract.
+
+Property demanded by :mod:`repro.core.forest`: for every backend of
+``kernels.ops.forest_update``, absorbing a batch with integer sample
+weights must equal absorbing the weight-expanded batch (each row repeated
+w times at unit weight) — the Oza–Russell bagging identity — and a
+weight-0 batch must be an exact no-op, all the way up through
+``hoeffding.update``.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import hoeffding as ht
+from repro.core import stats
+from repro.kernels import ops
+from tests.helpers import repeat_by_weights
+
+# hypothesis is a test extra: the property tests skip without it, the
+# deterministic weighted tests below always run
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover
+    HAVE_HYPOTHESIS = False
+needs_hypothesis = pytest.mark.skipif(not HAVE_HYPOTHESIS,
+                                      reason="hypothesis not installed")
+
+BACKENDS = [
+    "interpret", "jnp",
+    pytest.param("pallas", marks=pytest.mark.skipif(
+        jax.default_backend() != "tpu",
+        reason="compiled Pallas kernels need a TPU")),
+]
+
+M, F, C = 5, 2, 32
+
+
+def _empty_forest():
+    return (stats.init((M, F, C)), jnp.zeros((M, F, C)),
+            jnp.full((M, F), 0.25, jnp.float32), jnp.zeros((M, F)))
+
+
+def _check_weighted_vs_repeated(backend, w, leaf, X, y):
+    ao_y, ao_sum_x, ao_radius, ao_origin = _empty_forest()
+    wy, wsx = ops.forest_update(ao_y, ao_sum_x, ao_radius, ao_origin,
+                                jnp.array(leaf), jnp.array(X), jnp.array(y),
+                                jnp.array(w), backend=backend)
+    leaf_r, X_r, y_r = repeat_by_weights(w, leaf, X, y)
+    if len(leaf_r) == 0:  # all-zero weights: exact no-op
+        for k in ("n", "mean", "m2"):
+            np.testing.assert_array_equal(np.asarray(wy[k]),
+                                          np.asarray(ao_y[k]))
+        np.testing.assert_array_equal(np.asarray(wsx), np.asarray(ao_sum_x))
+        return
+    ry, rsx = ops.forest_update(ao_y, ao_sum_x, ao_radius, ao_origin,
+                                jnp.array(leaf_r), jnp.array(X_r),
+                                jnp.array(y_r), backend=backend)
+    for k in ("n", "mean", "m2"):
+        np.testing.assert_allclose(np.asarray(wy[k]), np.asarray(ry[k]),
+                                   atol=1e-4, rtol=1e-4, err_msg=k)
+    np.testing.assert_allclose(np.asarray(wsx), np.asarray(rsx),
+                               atol=1e-4, rtol=1e-4)
+
+
+if HAVE_HYPOTHESIS:
+    @pytest.mark.parametrize("backend", BACKENDS)
+    @settings(max_examples=20, deadline=None)
+    @given(data=st.data())
+    def test_weighted_absorb_equals_repeated_unit_absorbs(backend, data):
+        """forest_update(w) == forest_update(rows repeated w times, w=1)."""
+        B = data.draw(st.integers(1, 10), label="B")
+        w = np.array(data.draw(st.lists(st.integers(0, 4), min_size=B,
+                                        max_size=B), label="w"), np.float32)
+        rng = np.random.default_rng(
+            data.draw(st.integers(0, 2**31), label="seed"))
+        leaf = rng.integers(0, M, B).astype(np.int32)
+        X = rng.normal(0, 1, (B, F)).astype(np.float32)
+        y = rng.normal(0, 2, B).astype(np.float32)
+        _check_weighted_vs_repeated(backend, w, leaf, X, y)
+
+    @settings(max_examples=25, deadline=None)
+    @given(data=st.data())
+    def test_stats_weighted_observe_equals_repeated_merge(data):
+        """The scalar algebra itself: observe(y, w) == w unit observes."""
+        ys = data.draw(st.lists(st.floats(-50, 50), min_size=1, max_size=8))
+        ws = data.draw(st.lists(st.integers(0, 4), min_size=len(ys),
+                                max_size=len(ys)))
+        s_w, s_u = stats.init(()), stats.init(())
+        for yv, wv in zip(ys, ws):
+            s_w = stats.observe(s_w, yv, float(wv))
+            for _ in range(wv):
+                s_u = stats.observe(s_u, yv, 1.0)
+        np.testing.assert_allclose(float(s_w["n"]), float(s_u["n"]),
+                                   atol=1e-5)
+        np.testing.assert_allclose(float(s_w["mean"]), float(s_u["mean"]),
+                                   atol=1e-3, rtol=1e-4)
+        np.testing.assert_allclose(float(s_w["m2"]), float(s_u["m2"]),
+                                   atol=1e-2, rtol=1e-3)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_weighted_absorb_fixed_seeds(backend):
+    """Deterministic slice of the bagging identity (runs without
+    hypothesis; includes an all-zero-weight batch)."""
+    for seed, B in ((0, 1), (1, 7), (2, 12)):
+        rng = np.random.default_rng(seed)
+        w = rng.integers(0, 5, B).astype(np.float32)
+        _check_weighted_vs_repeated(
+            backend, w, rng.integers(0, M, B).astype(np.int32),
+            rng.normal(0, 1, (B, F)).astype(np.float32),
+            rng.normal(0, 2, B).astype(np.float32))
+    _check_weighted_vs_repeated(
+        backend, np.zeros(4, np.float32), np.zeros(4, np.int32),
+        np.ones((4, F), np.float32), np.ones(4, np.float32))
+
+
+@pytest.mark.parametrize("backend", ["jnp", "oracle"])
+def test_tree_update_weight_zero_is_noop(backend):
+    """A weight-0 batch leaves the WHOLE tree state bit-identical."""
+    rng = np.random.default_rng(0)
+    cfg = ht.HTRConfig(n_features=3, max_nodes=15, n_bins=32,
+                       grace_period=100, max_depth=4, r0=0.3,
+                       split_backend=backend)
+    state = ht.init_state(cfg)
+    upd = jax.jit(functools.partial(ht.update, cfg))
+    # warm the tree so the no-op check covers a non-trivial state
+    for _ in range(3):
+        X = jnp.array(rng.normal(0, 1, (128, 3)).astype(np.float32))
+        y = jnp.array(rng.normal(0, 2, 128).astype(np.float32))
+        state = upd(state, X, y)
+    X = jnp.array(rng.normal(0, 1, (64, 3)).astype(np.float32))
+    y = jnp.array(rng.normal(0, 2, 64).astype(np.float32))
+    after = upd(state, X, y, jnp.zeros((64,), jnp.float32))
+    flat_b, _ = jax.tree_util.tree_flatten(state)
+    flat_a, _ = jax.tree_util.tree_flatten(after)
+    for b, a in zip(flat_b, flat_a):
+        np.testing.assert_array_equal(np.asarray(b), np.asarray(a))
+
+
+def test_tree_integer_weights_match_repeated_rows():
+    """hoeffding.update with integer w grows the same tree as the
+    weight-expanded stream (leaf stats, QO tables and splits all agree)."""
+    rng = np.random.default_rng(5)
+    cfg = ht.HTRConfig(n_features=2, max_nodes=15, n_bins=32,
+                       grace_period=80, max_depth=4, r0=0.3)
+    s_w, s_r = ht.init_state(cfg), ht.init_state(cfg)
+    upd = jax.jit(functools.partial(ht.update, cfg))
+    for _ in range(6):
+        X = rng.normal(0, 1, (96, 2)).astype(np.float32)
+        y = np.where(X[:, 0] <= 0, 1.0, 6.0).astype(np.float32)
+        w = rng.poisson(2.0, 96).astype(np.float32)
+        X_r, y_r = repeat_by_weights(w, X, y)
+        s_w = upd(s_w, jnp.array(X), jnp.array(y), jnp.array(w))
+        if len(X_r):
+            s_r = upd(s_r, jnp.array(X_r), jnp.array(y_r))
+    assert int(s_w["n_nodes"]) == int(s_r["n_nodes"])
+    np.testing.assert_array_equal(np.asarray(s_w["is_leaf"]),
+                                  np.asarray(s_r["is_leaf"]))
+    np.testing.assert_allclose(np.asarray(s_w["ystats"]["n"]),
+                               np.asarray(s_r["ystats"]["n"]), atol=1e-3)
+    np.testing.assert_allclose(np.asarray(s_w["ystats"]["mean"]),
+                               np.asarray(s_r["ystats"]["mean"]),
+                               atol=1e-3, rtol=1e-4)

@@ -1,0 +1,25 @@
+"""Shared writer for the repo-root BENCH_*.json perf-trajectory artifacts.
+
+One schema, one serializer: ``[{name, us_per_call, derived}, ...]`` rows
+with ``us_per_call`` rounded to 3 decimals.  Used by both
+:mod:`benchmarks.run` (which commits the baselines) and
+:mod:`benchmarks.check_regression` (which diffs fresh runs against them),
+so the two can never drift apart in format.  Lives in its own module
+because ``benchmarks.run`` has import-time side effects (compute-dtype
+setup) that the regression gate must not inherit.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def write_bench(filename: str, rows) -> None:
+    """Write fixed-seed benchmark rows ``[(name, us_per_call, derived)]``
+    to the repo root so successive PRs can diff throughput."""
+    payload = [{"name": n, "us_per_call": round(float(us), 3), "derived": d}
+               for n, us, d in rows]
+    with open(os.path.join(REPO_ROOT, filename), "w") as f:
+        json.dump(payload, f, indent=1)

@@ -112,3 +112,12 @@ def run(out=None):
     _single_table(report, rng)
     _forest(report, rng)
     return report
+
+
+def to_rows(report):
+    """BENCH_kernels.json rows (name, us_per_call, derived) — shared by
+    benchmarks.run and benchmarks.check_regression so the regression gate
+    diffs exactly the rows the trajectory artifact commits."""
+    return [(f"kernel_{name}", k["observe_ns_per_elem"] / 1e3,
+             f"query_us={k['query_us']:.1f}")
+            for name, k in report.items()]

@@ -1,0 +1,100 @@
+"""Attempt-fraction sweep of the split query (DESIGN.md §2.5).
+
+The acceptance benchmark for compacted attempt scheduling: for each
+forest size, sweep the attempting fraction K/M over {1/64, 1/8, 1/2, 1}
+and race the K-compacted query against the full M-table scan IN THE SAME
+RUN (same tables, same jit discipline, interleaved timing loops), so the
+reported speedup is immune to machine-load drift between runs.  Both
+paths go through ``ops.forest_best_splits`` jitted with the attempt mask
+as an argument — i.e. the traced ``lax.switch`` bucket selection the
+streaming tree actually executes — and are pinned equal on the finite
+entries before timing.
+
+The acceptance bar (ISSUE 3): at K/M = 1/8, M = 255, compacted must be
+>= 3x the full scan, and learned trees bit-identical (pinned by
+tests/test_attempt_compaction.py).
+"""
+from __future__ import annotations
+
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import stats
+from repro.kernels import ops
+
+FRACTIONS = ((1, 64), (1, 8), (1, 2), (1, 1))
+
+
+def _time(f, *args, iters=20):
+    r = f(*args)
+    jax.block_until_ready(r)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        r = f(*args)
+    jax.block_until_ready(r)
+    return (time.perf_counter() - t0) / iters
+
+
+def _populated_forest(rng, M, F, C, B):
+    ao_y = stats.init((M, F, C))
+    ao_sum_x = jnp.zeros((M, F, C))
+    ao_radius = jnp.full((M, F), 0.1, jnp.float32)
+    ao_origin = jnp.zeros((M, F), jnp.float32)
+    leaf = jnp.array(rng.integers(0, M, B), jnp.int32)
+    X = jnp.array(rng.normal(0, 1, (B, F)).astype(np.float32))
+    y = jnp.array(rng.normal(0, 1, B).astype(np.float32))
+    return ops.forest_update(ao_y, ao_sum_x, ao_radius, ao_origin,
+                             leaf, X, y, backend="jnp") + (ao_radius,
+                                                           ao_origin)
+
+
+def run(backend: str = "jnp"):
+    """Returns {size_key: {frac, K, compact_us, full_us, speedup, ...}}."""
+    rng = np.random.default_rng(0)
+    report = {}
+    for M, F, C, B in ((63, 4, 48, 1024), (255, 8, 64, 4096)):
+        tabs = _populated_forest(rng, M, F, C, B)
+        # tables ride as jit ARGUMENTS (like the streaming tree's trace):
+        # baking them in as constants lets XLA constant-fold table math
+        # with compile-time rounding, breaking the bitwise equality gate
+        j_comp = jax.jit(functools.partial(ops.forest_best_splits,
+                                           backend=backend, compact=True))
+        j_full = jax.jit(functools.partial(ops.forest_best_splits,
+                                           backend=backend, compact=False))
+        for num, den in FRACTIONS:
+            K = max(1, (M * num) // den)
+            att = np.zeros(M, bool)
+            att[rng.choice(M, K, replace=False)] = True
+            att = jnp.array(att)
+            # equality gate before timing: compacted == full on finite rows
+            mc, tc = j_comp(*tabs, att)
+            mf, tf = j_full(*tabs, att)
+            fin = np.isfinite(np.asarray(mf))
+            assert (np.isfinite(np.asarray(mc)) == fin).all()
+            np.testing.assert_array_equal(np.asarray(mc)[fin],
+                                          np.asarray(mf)[fin])
+            t_c = _time(j_comp, *tabs, att)
+            t_f = _time(j_full, *tabs, att)
+            report[f"M{M}_F{F}_C{C}_K{K}"] = {
+                "frac": f"{num}/{den}", "K": K, "M": M,
+                "compact_us": t_c * 1e6, "full_us": t_f * 1e6,
+                "speedup_vs_full_scan": t_f / t_c,
+                "buckets": list(ops.query_buckets(M)),
+            }
+    return report
+
+
+def to_rows(report):
+    """BENCH_query.json rows: (name, us_per_call, derived) — us_per_call
+    is the compacted query, the path the streaming tree dispatches."""
+    rows = []
+    for name, r in report.items():
+        rows.append((
+            f"query_{name}", r["compact_us"],
+            f"frac={r['frac']} full_us={r['full_us']:.1f}"
+            f" speedup_vs_full_scan={r['speedup_vs_full_scan']:.2f}"))
+    return rows

@@ -17,20 +17,8 @@ from repro.models import layers as L
 
 L.set_compute_dtype(jnp.float32)  # CPU container cannot execute bf16 dots
 
-from benchmarks import aos, forest, kernels, roofline, tree  # noqa: E402
-
-REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-
-
-def _write_bench(filename: str, rows) -> None:
-    """Stable perf-trajectory artifact at the repo root.
-
-    Fixed-seed benchmark rows, schema [{name, us_per_call, derived}, ...]
-    — one file per bench family so successive PRs can diff throughput."""
-    payload = [{"name": n, "us_per_call": round(float(us), 3), "derived": d}
-               for n, us, d in rows]
-    with open(os.path.join(REPO_ROOT, filename), "w") as f:
-        json.dump(payload, f, indent=1)
+from benchmarks import aos, forest, kernels, query_sweep, roofline, tree  # noqa: E402
+from benchmarks.bench_io import write_bench as _write_bench  # noqa: E402
 
 
 def main() -> None:
@@ -102,12 +90,16 @@ def main() -> None:
     # --- kernel micro-benches ---------------------------------------------
     krep = kernels.run()
     report["kernels"] = krep
-    kernel_rows = []
-    for name, k in krep.items():
-        kernel_rows.append((f"kernel_{name}", k["observe_ns_per_elem"] / 1e3,
-                            f"query_us={k['query_us']:.1f}"))
+    kernel_rows = kernels.to_rows(krep)
     csv.extend(kernel_rows)
     _write_bench("BENCH_kernels.json", kernel_rows)
+
+    # --- attempt-fraction query sweep: compacted vs full scan (§2.5) ------
+    qrep = query_sweep.run()
+    report["query_sweep"] = qrep
+    query_rows = query_sweep.to_rows(qrep)
+    csv.extend(query_rows)
+    _write_bench("BENCH_query.json", query_rows)
 
     # --- roofline summary from the dry-run ---------------------------------
     try:

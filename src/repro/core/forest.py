@@ -260,7 +260,8 @@ def _fused_member_update(cfg: ForestConfig, trees, feat_mask, X, y, w):
         ht._segment_stats(y_rep, gl, T * M, w_flat))
     trees = dict(trees,
                  ystats=stats.merge(trees["ystats"], batch_leaf),
-                 seen=trees["seen"] + batch_leaf["n"])
+                 seen_since_attempt=trees["seen_since_attempt"]
+                 + batch_leaf["n"])
 
     # absorb: one fused QO update for every (tree, leaf, feature) table
     flat = lambda a: a.reshape((T * M,) + a.shape[2:])
@@ -273,15 +274,19 @@ def _fused_member_update(cfg: ForestConfig, trees, feat_mask, X, y, w):
     trees = dict(trees, ao_y=jax.tree.map(unflat, ao_y),
                  ao_sum_x=unflat(ao_sum_x))
 
-    attempt = trees["is_leaf"] & (trees["seen"] >= tcfg.grace_period) \
-        & (trees["depth"] < tcfg.max_depth) \
-        & (trees["n_nodes"][:, None] + 1 < M)                   # (T, M)
+    # scheduling mask per member (shared definition with the single tree),
+    # plus the per-tree capacity gate                            # (T, M)
+    attempt = jax.vmap(functools.partial(ht.attempt_mask, tcfg))(trees) \
+        & (trees["n_nodes"][:, None] + 1 < M)
 
     def do(tr, att):
+        # the folded T*M table axis compacts across trees: the ONE query
+        # gathers only the attempting leaves of the whole ensemble
         merit, thr = kops.forest_best_splits(
             jax.tree.map(flat, tr["ao_y"]), flat(tr["ao_sum_x"]),
             flat(tr["ao_radius"]), flat(tr["ao_origin"]),
-            att.reshape(-1), backend=tcfg.split_backend)
+            att.reshape(-1), backend=tcfg.split_backend,
+            compact=tcfg.compact_query)
         return jax.vmap(functools.partial(ht._apply_splits, tcfg))(
             tr, merit.reshape(T, M, F), thr.reshape(T, M, F), att,
             feat_mask)
@@ -291,12 +296,17 @@ def _fused_member_update(cfg: ForestConfig, trees, feat_mask, X, y, w):
 
 
 def update(cfg: ForestConfig, state: ForestState, X: jax.Array,
-           y: jax.Array, axis_name: str | None = None):
+           y: jax.Array, axis_name: str | None = None,
+           w: jax.Array | None = None):
     """Learn one batch, test-then-train.
 
     Evaluates every member on the incoming batch (prequential), folds the
     batch into every member with fresh Poisson(λ) sample weights, advances
     the per-member drift windows and resets the worst drifting member.
+    ``w``: optional (B,) per-row weights multiplying every member's
+    Poisson draw AND weighting the prequential errors — a weight-0 row is
+    invisible to both learning and the drift windows, which is how
+    :func:`update_stream` folds a ragged tail batch in without bias.
 
     Returns ``(state, aux)`` with
     ``aux = {"member_mse": (T,), "forest_mse": (), "drift": (T,) bool}``
@@ -309,19 +319,23 @@ def update(cfg: ForestConfig, state: ForestState, X: jax.Array,
     X = jnp.asarray(X, jnp.float32)
     y = jnp.asarray(y, jnp.float32).reshape(-1)
     B = y.shape[0]
+    row_w = jnp.ones_like(y) if w is None \
+        else jnp.asarray(w, jnp.float32).reshape(-1)
+    wsum = jnp.maximum(row_w.sum(), 1e-12)
 
     # --- test: prequential member + forest errors on the raw stream ------
     yhat = member_predictions(cfg, state, X)                   # (T, B)
-    member_mse = jnp.mean((yhat - y[None, :]) ** 2, axis=1)    # (T,)
+    member_mse = (row_w[None, :] * (yhat - y[None, :]) ** 2).sum(1) / wsum
     fpred = _vote_combine(yhat, vote_weights(cfg, state), axis_name)
-    forest_mse = jnp.mean((fpred - y) ** 2)
+    forest_mse = (row_w * (fpred - y) ** 2).sum() / wsum
 
     # --- train: Poisson(λ) bagging weights, one fused member update ------
     split = jax.vmap(functools.partial(jax.random.split, num=3))(
         state["keys"])                                         # (T, 3, 2)
     keys, wkeys, mkeys = split[:, 0], split[:, 1], split[:, 2]
     cdf = jnp.asarray(_poisson_cdf(cfg.lam), jnp.float32)
-    w = jax.vmap(lambda k: _poisson_weights(k, cdf, (B,)))(wkeys)  # (T, B)
+    w = jax.vmap(lambda k: _poisson_weights(k, cdf, (B,)))(wkeys) \
+        * row_w[None, :]                                       # (T, B)
     if cfg.tree.split_backend == "oracle":
         trees = jax.vmap(functools.partial(ht.update, cfg.tree),
                          in_axes=(0, None, None, 0, 0))(
@@ -336,10 +350,21 @@ def update(cfg: ForestConfig, state: ForestState, X: jax.Array,
     # absorb the jump or the test chases its own tail and never fires.
     # The long window decays (effective length 1/(1-drift_decay) batches)
     # so the cold-start transient washes out of the reference.
-    first = state["err_win"]["n"] < 0.5
+    # Both windows advance by the batch's REAL-row fraction, not a full
+    # step: a masked tail batch with one live row must not move the EWMA
+    # at full drift_alpha (one outlier row could otherwise fire a
+    # spurious member swap at stream end).
+    live = row_w.sum() > 0
+    # clamped at 1: importance weights > 1 must not push the EWMA rate
+    # past drift_alpha (alpha > 1 would make the recursion sign-flip)
+    frac = jnp.where(live,
+                     jnp.minimum(wsum / jnp.maximum(jnp.float32(B), 1.0),
+                                 1.0), 0.0)
+    alpha = cfg.drift_alpha * frac
+    first = (state["err_win"]["n"] < 0.5) & live
     ewma = jnp.where(first, member_mse,
-                     (1.0 - cfg.drift_alpha) * state["err_ewma"]
-                     + cfg.drift_alpha * member_mse)
+                     (1.0 - alpha) * state["err_ewma"]
+                     + alpha * member_mse)
     ref = state["err_win"]
     sd = jnp.sqrt(jnp.maximum(stats.variance(ref), 1e-12))
     signal = (ref["n"] >= cfg.drift_min_batches) \
@@ -348,9 +373,16 @@ def update(cfg: ForestConfig, state: ForestState, X: jax.Array,
     # the tree axis is sharded): staggered resets keep the forest's memory
     worst = jnp.argmax(jnp.where(signal, ewma, -jnp.inf))
     drift = signal & (jnp.arange(signal.shape[0]) == worst)
-    decayed = {"n": cfg.drift_decay * ref["n"], "mean": ref["mean"],
-               "m2": cfg.drift_decay * ref["m2"]}
-    observed = stats.observe(decayed, member_mse)
+    # the reference decays by the same real-mass fraction it observes
+    # (decay^frac), so persistently sub-unit weights shift the window's
+    # time constant instead of silently lowering its n equilibrium below
+    # drift_min_batches (which would disarm detection); frac == 1 takes
+    # the exact python constant so unweighted streams are bit-identical
+    decay = jnp.where(frac >= 1.0, cfg.drift_decay,
+                      jnp.float32(cfg.drift_decay) ** frac)
+    decayed = {"n": decay * ref["n"], "mean": ref["mean"],
+               "m2": decay * ref["m2"]}
+    observed = stats.observe(decayed, member_mse, frac)
     # a signalling member's reference FREEZES (no decay, no observe): if it
     # wasn't this batch's worst it must keep its clean pre-drift reference
     # so it can fire again next batch — otherwise the window absorbs the
@@ -387,20 +419,21 @@ def update_stream(cfg: ForestConfig, state: ForestState, X: jax.Array,
                   y: jax.Array, batch_size: int = 256):
     """Scan a whole stream through :func:`update` in ONE dispatch.
 
-    X: (N, F), y: (N,); rows beyond the last full batch are dropped.
-    Returns ``(state, trace)`` where ``trace["forest_mse"]`` is the
-    (n_batches,) prequential forest MSE and ``trace["member_mse"]`` the
-    (n_batches, T) per-member traces — the benchmark's acceptance data.
+    X: (N, F), y: (N,).  A ragged tail rides in a final weight-0-masked
+    batch (:func:`repro.core.hoeffding.pad_stream`: invisible to
+    learning, bagging draws and the prequential windows), so ALL N rows
+    are learned.  Returns ``(state, trace)`` where ``trace["forest_mse"]``
+    is the (ceil(N / batch_size),) prequential forest MSE and
+    ``trace["member_mse"]`` the (n_batches, T) per-member traces — the
+    benchmark's acceptance data.
     """
-    n = (X.shape[0] // batch_size) * batch_size
-    Xc = X[:n].reshape(-1, batch_size, X.shape[1])
-    yc = y.reshape(-1)[:n].reshape(-1, batch_size)
+    Xc, yc, wc = ht.pad_stream(X, y, None, batch_size)
 
-    def body(s, xy):
-        s, aux = update(cfg, s, xy[0], xy[1])
+    def body(s, xyw):
+        s, aux = update(cfg, s, xyw[0], xyw[1], w=xyw[2])
         return s, (aux["forest_mse"], aux["member_mse"])
 
-    state, (fmse, mmse) = jax.lax.scan(body, state, (Xc, yc))
+    state, (fmse, mmse) = jax.lax.scan(body, state, (Xc, yc, wc))
     return state, {"forest_mse": fmse, "member_mse": mmse}
 
 

@@ -10,9 +10,15 @@ hot path is three explicit stages (DESIGN.md §2.3):
 * **absorb**  — ALL (leaf x feature) QO tables update in one fused pass
   through :func:`repro.kernels.ops.forest_update` (a Pallas kernel on TPU,
   an XLA-fused segment-reduction elsewhere);
-* **attempt** — split candidates for every table evaluate simultaneously
-  through :func:`repro.kernels.ops.forest_best_splits`, gated so the work
-  only runs when some leaf passed its grace period AND capacity remains.
+* **attempt** — split candidates evaluate through
+  :func:`repro.kernels.ops.forest_best_splits`, gated so the work only
+  runs when some leaf passed its grace period AND capacity remains, and
+  COMPACTED so its cost scales with the number of attempting leaves K
+  rather than capacity M (DESIGN.md §2.5).  ``HTRConfig.attempt_schedule``
+  picks the scheduling policy ("grace": re-attempt only after
+  ``grace_period`` *new* mass since the last attempt, tracked by the
+  ``seen_since_attempt`` counter; "eager": every mature leaf attempts
+  every batch), and ``compact_query`` can force the full-scan reference.
 
 ``HTRConfig.split_backend`` selects the engine: ``"auto"`` dispatches to
 the compiled kernels on TPU and the fused-jnp lowering elsewhere;
@@ -45,8 +51,9 @@ from repro.kernels import ref as kref
 
 TreeState = Dict[str, jax.Array]
 
-__all__ = ["HTRConfig", "init_state", "update", "update_stream", "predict",
-           "n_leaves", "depth_histogram"]
+__all__ = ["HTRConfig", "init_state", "update", "update_stream",
+           "pad_stream", "predict", "attempt_mask", "n_leaves",
+           "depth_histogram"]
 
 
 @dataclass(frozen=True)
@@ -61,6 +68,22 @@ class HTRConfig:
     r0: float = 0.05              # cold-start quantization radius (paper §5.2)
     sigma_k: float = 2.0          # dynamic radius r = sigma / k for children
     split_backend: str = "auto"   # auto | pallas | interpret | jnp | oracle
+    # attempt scheduling (DESIGN.md §2.5): "grace" re-attempts a leaf only
+    # after grace_period NEW weight mass since its last attempt (the
+    # paper-faithful FIMT semantics — the attempt set stays sparse);
+    # "eager" keeps every mature leaf (total mass >= grace_period) in the
+    # attempt set every batch (Manapragada-style eager splitting — more
+    # split opportunities, K ~ #leaves query work)
+    attempt_schedule: str = "grace"   # grace | eager
+    compact_query: bool = True    # K-compacted split query (§2.5); False
+    #                               forces the full M-table scan reference
+
+    def __post_init__(self):
+        if self.attempt_schedule not in ("grace", "eager"):
+            raise ValueError(
+                f"attempt_schedule={self.attempt_schedule!r}: expected "
+                f"'grace' (re-attempt after grace_period new mass) or "
+                f"'eager' (every mature leaf attempts every batch)")
 
 
 def init_state(cfg: HTRConfig) -> TreeState:
@@ -82,7 +105,9 @@ def init_state(cfg: HTRConfig) -> TreeState:
     ``ao_y``       Stats (M,F,C)  QO per-bin target statistics
     ``ao_radius``  (M, F) f32     per-(node, feature) quantization radius
     ``ao_origin``  (M, F) f32     value mapped to the middle bin
-    ``seen``       (M,) f32       weight mass since the last split attempt
+    ``seen_since_attempt``  (M,) f32  weight mass since the last split
+                                  attempt (the grace-period counter: reset
+                                  on every attempt, successful or not)
     ``n_nodes``    () i32         allocated node count
     =============  =============  ================================================
 
@@ -100,7 +125,7 @@ def init_state(cfg: HTRConfig) -> TreeState:
         "ao_y": stats.init((M, F, C)),       # QO bins per (node, feature)
         "ao_radius": jnp.full((M, F), cfg.r0, jnp.float32),
         "ao_origin": jnp.zeros((M, F), jnp.float32),
-        "seen": jnp.zeros((M,), jnp.float32),  # since last split attempt
+        "seen_since_attempt": jnp.zeros((M,), jnp.float32),
         "n_nodes": jnp.int32(1),
     }
 
@@ -253,14 +278,16 @@ def _do_attempts_oracle(cfg: HTRConfig, state: TreeState, attempt,
     st["child"] = st["child"].at[lidx, 0].set(c0, mode="drop")
     st["child"] = st["child"].at[lidx, 1].set(c1, mode="drop")
     st["is_leaf"] = st["is_leaf"].at[lidx].set(False, mode="drop")
-    st["seen"] = st["seen"].at[lidx].set(0.0, mode="drop")
+    st["seen_since_attempt"] = \
+        st["seen_since_attempt"].at[lidx].set(0.0, mode="drop")
 
     child_depth = state["depth"] + 1
     for ci in (c0i, c1i):
         st["is_leaf"] = st["is_leaf"].at[ci].set(True, mode="drop")
         st["depth"] = st["depth"].at[ci].set(child_depth, mode="drop")
         st["child"] = st["child"].at[ci].set(-1, mode="drop")
-        st["seen"] = st["seen"].at[ci].set(0.0, mode="drop")
+        st["seen_since_attempt"] = \
+            st["seen_since_attempt"].at[ci].set(0.0, mode="drop")
 
     idxM = jnp.arange(M)
     bins_f = jax.tree.map(lambda a: a[idxM, best_f], state["ao_y"])
@@ -287,7 +314,8 @@ def _do_attempts_oracle(cfg: HTRConfig, state: TreeState, attempt,
             lambda a: a.at[ci].set(0.0, mode="drop"), st["ao_y"])
 
     st["n_nodes"] = state["n_nodes"] + 2 * jnp.sum(can.astype(jnp.int32))
-    st["seen"] = jnp.where(attempt & ~can, 0.0, st["seen"])
+    st["seen_since_attempt"] = jnp.where(attempt & ~can, 0.0,
+                                         st["seen_since_attempt"])
     return st
 
 
@@ -310,8 +338,8 @@ def _apply_splits(cfg: HTRConfig, state: TreeState, merit, thr_all, attempt,
     st["child"] = st["child"].at[kids].set(-1, mode="drop")
     st["is_leaf"] = st["is_leaf"].at[lidx].set(False, mode="drop") \
                                  .at[kids].set(True, mode="drop")
-    st["seen"] = st["seen"].at[jnp.concatenate([lidx, kids])].set(
-        0.0, mode="drop")
+    st["seen_since_attempt"] = st["seen_since_attempt"].at[
+        jnp.concatenate([lidx, kids])].set(0.0, mode="drop")
     st["depth"] = st["depth"].at[kids].set(jnp.tile(state["depth"] + 1, 2),
                                            mode="drop")
 
@@ -353,15 +381,35 @@ def _apply_splits(cfg: HTRConfig, state: TreeState, merit, thr_all, attempt,
 
     st["n_nodes"] = state["n_nodes"] + 2 * jnp.sum(can.astype(jnp.int32))
     # failed attempts still reset the grace counter
-    st["seen"] = jnp.where(attempt & ~can, 0.0, st["seen"])
+    st["seen_since_attempt"] = jnp.where(attempt & ~can, 0.0,
+                                         st["seen_since_attempt"])
     return st
+
+
+def attempt_mask(cfg: HTRConfig, state: TreeState) -> jax.Array:
+    """(M,) bool — which leaves attempt a split this batch (§2.5).
+
+    ``attempt_schedule="grace"``: a leaf attempts once it has absorbed
+    ``grace_period`` new weight mass since its last attempt
+    (``seen_since_attempt``, reset on every attempt — the attempt set K
+    stays sparse and the compacted query cost tracks it).
+    ``"eager"``: every leaf whose TOTAL mass passed ``grace_period``
+    attempts every batch (monotone; K grows with the leaf count).
+    Depth-capped leaves never attempt; callers add the capacity gate.
+    """
+    if cfg.attempt_schedule == "grace":
+        mature = state["seen_since_attempt"] >= cfg.grace_period
+    else:  # "eager"
+        mature = state["ystats"]["n"] >= cfg.grace_period
+    return state["is_leaf"] & mature & (state["depth"] < cfg.max_depth)
 
 
 def _do_attempts(cfg: HTRConfig, state: TreeState, attempt,
                  feat_mask=None) -> TreeState:
     merit, thr_all = kops.forest_best_splits(
         state["ao_y"], state["ao_sum_x"], state["ao_radius"],
-        state["ao_origin"], attempt, backend=cfg.split_backend)
+        state["ao_origin"], attempt, backend=cfg.split_backend,
+        compact=cfg.compact_query)
     return _apply_splits(cfg, state, merit, thr_all, attempt, feat_mask)
 
 
@@ -402,14 +450,14 @@ def update(cfg: HTRConfig, state: TreeState, X: jax.Array, y: jax.Array,
     batch_leaf = _segment_stats(y, leaf, M, w)
     state = dict(state,
                  ystats=stats.merge(state["ystats"], batch_leaf),
-                 seen=state["seen"] + batch_leaf["n"])
+                 seen_since_attempt=state["seen_since_attempt"]
+                 + batch_leaf["n"])
 
     # --- absorb: one fused QO update for every (leaf, feature) table -----
     state = _absorb(cfg, state, leaf, X, y, w)
 
     # --- attempt ----------------------------------------------------------
-    attempt = state["is_leaf"] & (state["seen"] >= cfg.grace_period) \
-        & (state["depth"] < cfg.max_depth)
+    attempt = attempt_mask(cfg, state)
     if cfg.split_backend == "oracle":
         do = _do_attempts_oracle
     else:
@@ -424,28 +472,46 @@ def update(cfg: HTRConfig, state: TreeState, X: jax.Array, y: jax.Array,
         lambda s, a: dict(s), state, attempt)
 
 
+def pad_stream(X, y, w=None, batch_size: int = 256):
+    """Chunk a stream into (n_batches, batch_size, ...) with a masked tail.
+
+    X: (N, F), y: (N,), optional w: (N,) weights.  When N is not a
+    multiple of ``batch_size`` the remainder rides in a final batch whose
+    padding rows carry weight 0 — a no-op to every statistic by the
+    weighted-absorption contract, so ALL N rows count.  Shared by the
+    tree's and the forest's ``update_stream`` so their tail semantics can
+    never drift apart.  Returns (Xc, yc, wc), shapes
+    (ceil(N/batch_size), batch_size, ...).
+    """
+    X = jnp.asarray(X, jnp.float32)
+    y = jnp.asarray(y, jnp.float32).reshape(-1)
+    w = jnp.ones_like(y) if w is None \
+        else jnp.asarray(w, jnp.float32).reshape(-1)
+    pad = (-X.shape[0]) % batch_size
+    if pad:
+        X = jnp.concatenate([X, jnp.zeros((pad, X.shape[1]), X.dtype)])
+        y = jnp.concatenate([y, jnp.zeros((pad,), y.dtype)])
+        w = jnp.concatenate([w, jnp.zeros((pad,), w.dtype)])
+    return (X.reshape(-1, batch_size, X.shape[1]),
+            y.reshape(-1, batch_size), w.reshape(-1, batch_size))
+
+
 @functools.partial(jax.jit, static_argnames=("cfg", "batch_size"))
 def update_stream(cfg: HTRConfig, state: TreeState, X: jax.Array,
                   y: jax.Array, w: jax.Array | None = None,
                   batch_size: int = 256) -> TreeState:
     """Scan a whole stream through ``update`` in ONE dispatch.
 
-    X: (N, F), y: (N,), optional w: (N,) sample weights.  Rows beyond the
-    last full batch are dropped (matching a bounded-batch streaming
-    consumer); call ``update`` directly for the remainder.
+    X: (N, F), y: (N,), optional w: (N,) sample weights.  A ragged tail
+    rides in a final weight-0-masked batch (:func:`pad_stream`), so ALL
+    N rows are learned — no silent tail drop.
     """
-    n = (X.shape[0] // batch_size) * batch_size
-    Xc = X[:n].reshape(-1, batch_size, X.shape[1])
-    yc = y.reshape(-1)[:n].reshape(-1, batch_size)
-    wc = None if w is None else \
-        jnp.asarray(w, jnp.float32).reshape(-1)[:n].reshape(-1, batch_size)
+    Xc, yc, wc = pad_stream(X, y, w, batch_size)
 
     def body(s, xyw):
         return update(cfg, s, xyw[0], xyw[1], xyw[2]), None
 
-    state, _ = jax.lax.scan(
-        body, state,
-        (Xc, yc, jnp.ones_like(yc) if wc is None else wc))
+    state, _ = jax.lax.scan(body, state, (Xc, yc, wc))
     return state
 
 

@@ -15,9 +15,20 @@ The jnp lowering of the query uses prefix *sums* of (n, n*mean,
 m2 + n*mean^2) rather than log-depth Chan merges — one fused ``cumsum``
 instead of hundreds of tiny ops; the kernels and the
 :mod:`repro.core.qo` oracle keep the fully robust merge (DESIGN.md §2.4).
+
+Dispatch discipline (DESIGN.md §2.5): both forest ops auto-detect whether
+they are being traced.  Called with *concrete* arrays they dispatch
+through cached jits keyed on (shape bucket, backend) — batch sizes round
+up to power-of-two buckets and the split query compacts to the smallest
+power-of-two bucket holding the K attempting tables, so the compile cache
+stays bounded and two same-bucket calls never retrace.  Called under an
+enclosing trace (e.g. inside ``jax.jit(hoeffding.update)``) they inline,
+so the caller's jit still fuses the whole stage; the query then selects
+its K bucket at *runtime* with ``lax.switch``.
 """
 from __future__ import annotations
 
+import bisect
 import functools
 
 import jax
@@ -35,6 +46,7 @@ from repro.kernels.qo_query_batched import qo_query_batched_pallas
 __all__ = [
     "qo_update", "qo_best_split", "default_interpret", "resolve_backend",
     "forest_bin_ids", "forest_update", "forest_best_splits",
+    "query_buckets", "clear_jit_caches", "QUERY_MIN_BUCKET",
 ]
 
 
@@ -108,6 +120,24 @@ def qo_best_split(table: qo_lib.QOTable, *,
 # forest-scale ops: every (leaf, feature) table of a Hoeffding tree at once
 # --------------------------------------------------------------------------
 
+def _is_traced(*trees) -> bool:
+    """True when any leaf of the argument pytrees is a JAX tracer — i.e.
+    the caller is already inside a jit/vmap/scan trace and the op must
+    inline rather than dispatch through its own cached jit."""
+    return any(isinstance(leaf, jax.core.Tracer)
+               for t in trees for leaf in jax.tree.leaves(t))
+
+
+def _pow2_bucket(n: int, lo: int) -> int:
+    """Smallest power-of-two multiple of ``lo`` holding ``n`` (``lo`` must
+    itself be a power of two) — the shape-bucketing rule that bounds the
+    cached-jit compile count to O(log n) entries."""
+    b = lo
+    while b < n:
+        b *= 2
+    return b
+
+
 def forest_bin_ids(ao_radius, ao_origin, leaf, X, n_bins: int) -> jax.Array:
     """Quantize each routed row into its leaf's per-feature tables.
 
@@ -153,27 +183,9 @@ def _pad_batch(leaf, X, y, w, tile_b):
     return leaf, X, y, w
 
 
-def forest_update(ao_y, ao_sum_x, ao_radius, ao_origin, leaf, X, y, w=None, *,
-                  backend: str | None = None, tile_b: int = 256,
-                  tile_m: int = 128):
-    """Absorb a routed batch into every (leaf, feature) QO table.
-
-    ao_y: Stats dict of (M, F, C); ao_sum_x: (M, F, C); ao_radius/ao_origin:
-    (M, F); leaf: (B,) int32 routed leaf ids; X: (B, F); y: (B,);
-    w: optional (B,) f32 sample weights (default 1) — every accumulated
-    statistic carries w, so weight-0 rows vanish and integer weight k
-    equals k repeated unit rows (the online-bagging contract,
-    property-tested in tests/test_weighted.py).
-    Returns the merged (ao_y, ao_sum_x).
-
-    Deliberately NOT jitted: the tree's ``update`` traces it inline so XLA
-    fuses the whole absorb stage (a nested jit would block that); jit it
-    yourself for standalone use.
-    """
-    backend = resolve_backend(backend)
-    X = jnp.asarray(X, jnp.float32)
-    y = jnp.asarray(y, jnp.float32).reshape(-1)
-    w = jnp.ones_like(y) if w is None else jnp.asarray(w, jnp.float32).reshape(-1)
+def _forest_update_impl(ao_y, ao_sum_x, ao_radius, ao_origin, leaf, X, y, w,
+                        *, backend: str, tile_b: int, tile_m: int):
+    """Backend dispatch body of :func:`forest_update` (inputs normalized)."""
     if backend == "jnp":
         return _forest_update_jnp(ao_y, ao_sum_x, ao_radius, ao_origin,
                                   leaf, X, y, w)
@@ -187,6 +199,47 @@ def forest_update(ao_y, ao_sum_x, ao_radius, ao_origin, leaf, X, y, w=None, *,
         dense, leaf[None, :], X.T, y[None, :], w[None, :], n_bins=C,
         tile_b=tile_b, tile_m=tile_m, interpret=(backend == "interpret"))
     return unpack_forest(dense, M, C)
+
+
+@functools.lru_cache(maxsize=None)
+def _jit_forest_update(backend: str, tile_b: int, tile_m: int):
+    """Cached jit of the absorb op, keyed on backend + tiling; the inner
+    jit cache is keyed on shapes, which the public wrapper buckets."""
+    return jax.jit(functools.partial(_forest_update_impl, backend=backend,
+                                     tile_b=tile_b, tile_m=tile_m))
+
+
+def forest_update(ao_y, ao_sum_x, ao_radius, ao_origin, leaf, X, y, w=None, *,
+                  backend: str | None = None, tile_b: int = 256,
+                  tile_m: int = 128):
+    """Absorb a routed batch into every (leaf, feature) QO table.
+
+    ao_y: Stats dict of (M, F, C); ao_sum_x: (M, F, C); ao_radius/ao_origin:
+    (M, F); leaf: (B,) int32 routed leaf ids; X: (B, F); y: (B,);
+    w: optional (B,) f32 sample weights (default 1) — every accumulated
+    statistic carries w, so weight-0 rows vanish and integer weight k
+    equals k repeated unit rows (the online-bagging contract,
+    property-tested in tests/test_weighted.py).
+    Returns the merged (ao_y, ao_sum_x).
+
+    Called with concrete arrays this dispatches through a cached jit with
+    the batch padded (leaf = -1, w = 0: such rows vanish on every backend)
+    to a power-of-two bucket, so ragged streaming batches reuse a bounded
+    set of compiled programs.  Under an enclosing trace it inlines, so the
+    caller's jit fuses the whole absorb stage.
+    """
+    backend = resolve_backend(backend)
+    leaf = jnp.asarray(leaf, jnp.int32).reshape(-1)
+    X = jnp.asarray(X, jnp.float32)
+    y = jnp.asarray(y, jnp.float32).reshape(-1)
+    w = jnp.ones_like(y) if w is None else jnp.asarray(w, jnp.float32).reshape(-1)
+    if _is_traced(ao_y, ao_sum_x, ao_radius, ao_origin, leaf, X, y, w):
+        return _forest_update_impl(ao_y, ao_sum_x, ao_radius, ao_origin,
+                                   leaf, X, y, w, backend=backend,
+                                   tile_b=tile_b, tile_m=tile_m)
+    leaf, X, y, w = _pad_batch(leaf, X, y, w, _pow2_bucket(X.shape[0], 128))
+    return _jit_forest_update(backend, tile_b, tile_m)(
+        ao_y, ao_sum_x, ao_radius, ao_origin, leaf, X, y, w)
 
 
 def _forest_query_jnp(ao_y, ao_sum_x, attempt):
@@ -234,17 +287,24 @@ def _forest_query_jnp(ao_y, ao_sum_x, attempt):
     return score, cand
 
 
-def forest_best_splits(ao_y, ao_sum_x, ao_radius, ao_origin, attempt, *,
-                       backend: str | None = None, tile_m: int = 128):
-    """Best split candidate of every (leaf, feature) table, in one pass.
+QUERY_MIN_BUCKET = 8
 
-    attempt: (M,) bool — tables of leaves below their grace period are
-    masked out (and whole quiet tiles are skipped on the kernel path).
-    Returns (merit, threshold), both (M, F); merit is -inf where no valid
-    boundary exists or the leaf is not attempting.  Not jitted, same
-    reason as :func:`forest_update`.
-    """
-    backend = resolve_backend(backend)
+
+def query_buckets(M: int, min_bucket: int = QUERY_MIN_BUCKET):
+    """Static K_pad buckets for a capacity-M table axis: powers of two from
+    ``min_bucket`` up, capped by a final full-scan bucket of M itself (so
+    a near-full attempt set pays no gather/scatter overhead)."""
+    sizes = []
+    b = min_bucket
+    while b < M:
+        sizes.append(b)
+        b *= 2
+    return tuple(sizes) + (M,)
+
+
+def _query_full(ao_y, ao_sum_x, ao_radius, ao_origin, attempt, *,
+                backend: str, tile_m: int):
+    """Uncompacted query over all M tables -> (merit, thr), both (M, F)."""
     M, F, C = ao_sum_x.shape
     if backend == "jnp":
         score, cand = _forest_query_jnp(ao_y, ao_sum_x, attempt)
@@ -260,3 +320,96 @@ def forest_best_splits(ao_y, ao_sum_x, ao_radius, ao_origin, attempt, *,
     merit = jnp.max(score, -1).reshape(M, F)
     thr = jnp.take_along_axis(cand, best[:, None], 1)[:, 0].reshape(M, F)
     return merit, thr
+
+
+def _query_compact(ao_y, ao_sum_x, ao_radius, ao_origin, attempt, *,
+                   kpad: int, backend: str, tile_m: int):
+    """Compact-gather -> query -> scatter-back for a static K_pad bucket.
+
+    Gathers the (at most kpad) attempting tables into a dense
+    (kpad, F, C) buffer, runs the ordinary query over it — pad rows carry
+    attempt=False, so masked math on jnp and ``pl.when``-skipped tiles on
+    the kernel path — and scatters (merit, thr) back to (M, F) with -inf
+    fill.  Per-table math is row-independent on every backend, so the
+    attempting rows' results are bit-identical to the full scan's.
+    """
+    M, F, _ = ao_sum_x.shape
+    idx = jnp.nonzero(attempt, size=kpad, fill_value=M)[0]       # (kpad,)
+    safe = jnp.minimum(idx, M - 1)
+    sub = lambda a: a[safe]
+    merit_k, thr_k = _query_full(
+        jax.tree.map(sub, ao_y), sub(ao_sum_x), sub(ao_radius),
+        sub(ao_origin), idx < M, backend=backend, tile_m=tile_m)
+    merit = jnp.full((M, F), -jnp.inf, jnp.float32).at[idx].set(
+        merit_k, mode="drop")
+    thr = jnp.zeros((M, F), jnp.float32).at[idx].set(thr_k, mode="drop")
+    return merit, thr
+
+
+@functools.lru_cache(maxsize=None)
+def _jit_forest_query(backend: str, tile_m: int, kpad: int | None):
+    """Cached jit of one query bucket (kpad=None: the full scan)."""
+    fn = _query_full if kpad is None else \
+        functools.partial(_query_compact, kpad=kpad)
+    return jax.jit(functools.partial(fn, backend=backend, tile_m=tile_m))
+
+
+def clear_jit_caches() -> None:
+    """Drop the cached-jit entry points (test hook: lets a fresh trace see
+    monkeypatched query/update internals and resets ``_cache_size``)."""
+    _jit_forest_update.cache_clear()
+    _jit_forest_query.cache_clear()
+
+
+def forest_best_splits(ao_y, ao_sum_x, ao_radius, ao_origin, attempt, *,
+                       backend: str | None = None, tile_m: int = 128,
+                       compact: bool = True,
+                       min_bucket: int = QUERY_MIN_BUCKET):
+    """Best split candidate of every (leaf, feature) table.
+
+    attempt: (M,) bool — tables of leaves below their grace period are
+    masked out.  Returns (merit, threshold), both (M, F); merit is -inf
+    where no valid boundary exists or the leaf is not attempting (thr is
+    0 there on the compacted path and unspecified on the full scan — only
+    positions with finite merit are meaningful).
+
+    With ``compact=True`` (default) the evaluation cost scales with the
+    number of *attempting* leaves K, not capacity M (DESIGN.md §2.5): the
+    K attempting tables gather into the smallest power-of-two bucket
+    >= K (``query_buckets``), the query runs over that dense buffer, and
+    results scatter back.  Called with concrete arrays, K is known and
+    the bucket dispatches in Python through a cached jit — K = 0 performs
+    no query at all; under an enclosing trace the bucket is selected at
+    runtime by ``lax.switch``, so a jitted streaming update still only
+    pays for the branch it takes.  ``compact=False`` keeps the full
+    M-table scan (the reference path; attempting rows of both paths are
+    bit-identical).
+    """
+    backend = resolve_backend(backend)
+    M, F, C = ao_sum_x.shape
+    buckets = query_buckets(M, min_bucket)
+    traced = _is_traced(ao_y, ao_sum_x, ao_radius, ao_origin, attempt)
+    if not compact or len(buckets) == 1:
+        if traced:
+            return _query_full(ao_y, ao_sum_x, ao_radius, ao_origin, attempt,
+                               backend=backend, tile_m=tile_m)
+        return _jit_forest_query(backend, tile_m, None)(
+            ao_y, ao_sum_x, ao_radius, ao_origin, attempt)
+
+    if traced:
+        K = jnp.sum(attempt, dtype=jnp.int32)
+        bidx = jnp.searchsorted(jnp.asarray(buckets, jnp.int32), K)
+        branches = [
+            functools.partial(_query_compact, kpad=b, backend=backend,
+                              tile_m=tile_m) for b in buckets[:-1]
+        ] + [functools.partial(_query_full, backend=backend, tile_m=tile_m)]
+        return jax.lax.switch(bidx, branches, ao_y, ao_sum_x, ao_radius,
+                              ao_origin, attempt)
+
+    K = int(jnp.sum(attempt))
+    if K == 0:  # nothing attempts: no query is dispatched at all
+        return (jnp.full((M, F), -jnp.inf, jnp.float32),
+                jnp.zeros((M, F), jnp.float32))
+    kpad = buckets[bisect.bisect_left(buckets, K)]
+    return _jit_forest_query(backend, tile_m, None if kpad == M else kpad)(
+        ao_y, ao_sum_x, ao_radius, ao_origin, attempt)

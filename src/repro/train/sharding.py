@@ -235,8 +235,12 @@ def forest_state_specs(state, axis="data"):
 
     Every leaf of a :mod:`repro.core.forest` state carries the tree axis
     first (the module's layout invariant), so the rule is uniform:
-    ``P(axis, None, ...)``.  ``state`` may be a real pytree or the
-    ``jax.eval_shape`` abstraction of one.
+    ``P(axis, None, ...)`` — new per-leaf state rides along automatically
+    (e.g. the §2.5 ``seen_since_attempt`` grace counters shard as
+    ``P(axis, None)`` like every other (T, M) member field, keeping the
+    attempt mask — and therefore the compacted split query's K bucket —
+    a purely shard-local decision).  ``state`` may be a real pytree or
+    the ``jax.eval_shape`` abstraction of one.
     """
     return jax.tree.map(
         lambda a: P(axis, *([None] * (a.ndim - 1))), state)

@@ -1,0 +1,266 @@
+"""Attempt scheduling + compacted split query (DESIGN.md §2.5).
+
+Edge-case coverage demanded by the K-compacted query path: K = 0 (no
+query dispatched at all — asserted via a counting shim on the query
+internals), K = 1, K = M, a leaf crossing its grace period exactly on a
+batch boundary, bit-identical compacted vs full-scan results on every
+backend, and the cached-jit no-recompile regression.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import hoeffding as ht
+from repro.core import stats
+from repro.data import synth
+from repro.kernels import ops, ref
+
+BACKENDS = [
+    "interpret", "jnp",
+    pytest.param("pallas", marks=pytest.mark.skipif(
+        jax.default_backend() != "tpu",
+        reason="compiled Pallas kernels need a TPU")),
+]
+
+
+def _forest_state(rng, M=12, F=3, C=48):
+    """Random occupied forest built through the per-table oracle."""
+    ao_y = stats.init((M, F, C))
+    ao_sum_x = jnp.zeros((M, F, C))
+    ao_radius = jnp.array(rng.uniform(0.05, 0.4, (M, F)).astype(np.float32))
+    ao_origin = jnp.array(rng.normal(0, 0.5, (M, F)).astype(np.float32))
+    B = 160
+    leaf = jnp.array(rng.integers(0, M, B), jnp.int32)
+    X = jnp.array(rng.normal(0, 1, (B, F)).astype(np.float32))
+    y = jnp.array(rng.normal(0, 2, B).astype(np.float32))
+    ao_y, ao_sum_x = ref.forest_update_ref(
+        ao_y, ao_sum_x, ao_radius, ao_origin, leaf, X, y)
+    return ao_y, ao_sum_x, ao_radius, ao_origin
+
+
+def _attempt_with_k(rng, M, K):
+    att = np.zeros(M, bool)
+    att[rng.choice(M, K, replace=False)] = True
+    return jnp.array(att)
+
+
+# --------------------------------------------------------------------------
+# K edge cases: 0, 1, M — compacted == full scan, bitwise
+# --------------------------------------------------------------------------
+
+def test_k0_dispatches_no_query(rng, monkeypatch):
+    """attempt all-False: the concrete path must not run ANY query."""
+    ao_y, ao_sum_x, ao_radius, ao_origin = _forest_state(rng)
+    calls = {"full": 0, "compact": 0}
+    real_full, real_compact = ops._query_full, ops._query_compact
+
+    def count_full(*a, **k):
+        calls["full"] += 1
+        return real_full(*a, **k)
+
+    def count_compact(*a, **k):
+        calls["compact"] += 1
+        return real_compact(*a, **k)
+
+    ops.clear_jit_caches()  # fresh traces must see the counting shim
+    monkeypatch.setattr(ops, "_query_full", count_full)
+    monkeypatch.setattr(ops, "_query_compact", count_compact)
+    try:
+        M = ao_sum_x.shape[0]
+        merit, thr = ops.forest_best_splits(
+            ao_y, ao_sum_x, ao_radius, ao_origin, jnp.zeros((M,), bool),
+            backend="jnp")
+        assert calls == {"full": 0, "compact": 0}, \
+            "K=0 must short-circuit before any query"
+        assert not np.isfinite(np.asarray(merit)).any()
+        assert (np.asarray(thr) == 0.0).all()
+        # K=1 by contrast dispatches exactly one compacted query (which
+        # delegates to the shared _query_full body over the K_pad buffer)
+        ops.forest_best_splits(ao_y, ao_sum_x, ao_radius, ao_origin,
+                               _attempt_with_k(rng, M, 1), backend="jnp")
+        assert calls["compact"] == 1
+    finally:
+        ops.clear_jit_caches()  # drop jits traced over the shim
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("K", [1, 5, "M"])
+def test_compacted_matches_full_scan(backend, K, rng):
+    """Compacted gather->query->scatter is bit-identical to the full scan
+    wherever the full scan reports a finite merit."""
+    ao_y, ao_sum_x, ao_radius, ao_origin = _forest_state(rng)
+    M = ao_sum_x.shape[0]
+    K = M if K == "M" else K
+    attempt = _attempt_with_k(rng, M, K)
+    mf, tf = ops.forest_best_splits(ao_y, ao_sum_x, ao_radius, ao_origin,
+                                    attempt, backend=backend, compact=False)
+    mc, tc = ops.forest_best_splits(ao_y, ao_sum_x, ao_radius, ao_origin,
+                                    attempt, backend=backend, compact=True)
+    mf, tf, mc, tc = map(np.asarray, (mf, tf, mc, tc))
+    fin = np.isfinite(mf)
+    assert (np.isfinite(mc) == fin).all()
+    np.testing.assert_array_equal(mc[fin], mf[fin])
+    np.testing.assert_array_equal(tc[fin], tf[fin])
+    # non-attempting leaves are fully masked either way
+    assert not np.isfinite(mc[~np.asarray(attempt)]).any()
+
+
+@pytest.mark.parametrize("backend", ["interpret", "jnp"])
+def test_traced_switch_matches_concrete_dispatch(backend, rng):
+    """The lax.switch bucket selection (traced path) == the python-side
+    bucket dispatch (concrete path) for every K regime."""
+    ao_y, ao_sum_x, ao_radius, ao_origin = _forest_state(rng)
+    M = ao_sum_x.shape[0]
+    jitted = jax.jit(functools.partial(
+        ops.forest_best_splits, backend=backend, compact=True))
+    for K in (1, 3, 9, M):
+        attempt = _attempt_with_k(rng, M, K)
+        me, te = ops.forest_best_splits(
+            ao_y, ao_sum_x, ao_radius, ao_origin, attempt, backend=backend)
+        mt, tt = jitted(ao_y, ao_sum_x, ao_radius, ao_origin, attempt)
+        np.testing.assert_array_equal(np.asarray(me), np.asarray(mt))
+        fin = np.isfinite(np.asarray(me))
+        np.testing.assert_array_equal(np.asarray(te)[fin],
+                                      np.asarray(tt)[fin])
+
+
+# --------------------------------------------------------------------------
+# grace-period scheduling semantics
+# --------------------------------------------------------------------------
+
+def _two_cluster_batch(rng, n, F=3):
+    """Linearly separable batch: feature 0 carries all the signal."""
+    X = rng.normal(0, 0.05, (n, F)).astype(np.float32)
+    half = n // 2
+    X[:half, 0] -= 1.0
+    X[half:, 0] += 1.0
+    y = np.where(X[:, 0] <= 0, 0.0, 5.0).astype(np.float32)
+    return jnp.array(X), jnp.array(y)
+
+
+def test_grace_crossing_on_batch_boundary(rng):
+    """A leaf whose counter hits grace_period EXACTLY at a batch boundary
+    attempts on that batch — and one unit short of it does not."""
+    F, bs = 3, 256
+    X, y = _two_cluster_batch(rng, bs, F)
+    # grace == batch size: the very first batch crosses exactly
+    cfg = ht.HTRConfig(n_features=F, max_nodes=15, n_bins=32,
+                       grace_period=bs, max_depth=4, r0=0.3, delta=1e-2)
+    s = ht.update(cfg, ht.init_state(cfg), X, y)
+    assert int(s["n_nodes"]) > 1, "attempt must fire at seen == grace"
+    # grace one past the batch: no attempt on batch 1, attempt on batch 2
+    cfg2 = ht.HTRConfig(n_features=F, max_nodes=15, n_bins=32,
+                        grace_period=bs + 1, max_depth=4, r0=0.3, delta=1e-2)
+    s2 = ht.update(cfg2, ht.init_state(cfg2), X, y)
+    assert int(s2["n_nodes"]) == 1, "seen < grace must not attempt"
+    assert float(s2["seen_since_attempt"][0]) == bs
+    s2 = ht.update(cfg2, s2, X, y)
+    assert int(s2["n_nodes"]) > 1
+
+
+def test_failed_attempt_resets_grace_counter(rng):
+    """Paper-faithful semantics: an attempt that does NOT split still
+    resets seen_since_attempt, so the leaf leaves the attempt set until
+    grace_period NEW mass arrives (no monotone always-attempting set)."""
+    F = 2
+    cfg = ht.HTRConfig(n_features=F, max_nodes=15, n_bins=32,
+                       grace_period=100, max_depth=4, r0=0.3)
+    X = jnp.array(rng.normal(0, 1, (150, F)).astype(np.float32))
+    y = jnp.full((150,), 3.0, jnp.float32)      # constant target: VR == 0
+    s = ht.update(cfg, ht.init_state(cfg), X, y)
+    assert int(s["n_nodes"]) == 1, "zero-merit data must not split"
+    assert float(s["seen_since_attempt"][0]) == 0.0, \
+        "failed attempt must reset the grace counter"
+    # the next sub-grace batch must NOT re-enter the attempt set
+    s = ht.update(cfg, s, X[:50], y[:50])
+    assert float(s["seen_since_attempt"][0]) == 50.0
+
+
+def test_eager_schedule_keeps_mature_leaves_attempting():
+    """attempt_schedule='eager': a mature leaf attempts every batch even
+    right after a reset; 'grace' waits for fresh mass."""
+    grace_cfg = ht.HTRConfig(n_features=2, max_nodes=7, grace_period=100)
+    eager_cfg = ht.HTRConfig(n_features=2, max_nodes=7, grace_period=100,
+                             attempt_schedule="eager")
+    state = ht.init_state(grace_cfg)
+    state = dict(state, ystats=jax.tree.map(
+        lambda a, v: a.at[0].set(v),
+        state["ystats"], {"n": 500.0, "mean": 1.0, "m2": 10.0}))
+    # counter just reset (post-attempt): grace waits, eager re-attempts
+    assert not bool(ht.attempt_mask(grace_cfg, state)[0])
+    assert bool(ht.attempt_mask(eager_cfg, state)[0])
+    state = dict(state,
+                 seen_since_attempt=state["seen_since_attempt"].at[0].set(100.0))
+    assert bool(ht.attempt_mask(grace_cfg, state)[0])
+    with pytest.raises(ValueError):
+        ht.HTRConfig(n_features=2, attempt_schedule="bogus")
+
+
+# --------------------------------------------------------------------------
+# the hard gate: learned trees bit-identical, compacted vs full scan
+# --------------------------------------------------------------------------
+
+def test_stream_trees_bit_identical_compacted_vs_full_scan():
+    """The tier-1 stream protocol, compact_query on vs off: every state
+    array of the learned trees must match exactly (mse_rel_diff == 0)."""
+    X, y = synth.piecewise_regression(6000, n_features=3, seed=9)
+    states = {}
+    for compact in (True, False):
+        cfg = ht.HTRConfig(n_features=3, max_nodes=31, n_bins=32,
+                           grace_period=200, max_depth=6, r0=0.3,
+                           compact_query=compact)
+        states[compact] = ht.update_stream(cfg, ht.init_state(cfg),
+                                           jnp.array(X), jnp.array(y),
+                                           batch_size=256)
+    flat_c, _ = jax.tree_util.tree_flatten_with_path(states[True])
+    flat_f, _ = jax.tree_util.tree_flatten_with_path(states[False])
+    for (path, a), (_, b) in zip(flat_c, flat_f):
+        np.testing.assert_array_equal(
+            np.asarray(a), np.asarray(b),
+            err_msg=f"state leaf {jax.tree_util.keystr(path)} diverged")
+    cfg = ht.HTRConfig(n_features=3, max_nodes=31, n_bins=32,
+                       grace_period=200, max_depth=6, r0=0.3)
+    Xt, yt = synth.piecewise_regression(1000, n_features=3, seed=90)
+    p_c = np.asarray(ht.predict(cfg, states[True], jnp.array(Xt)))
+    p_f = np.asarray(ht.predict(cfg, states[False], jnp.array(Xt)))
+    mse_c = float(np.mean((p_c - yt) ** 2))
+    mse_f = float(np.mean((p_f - yt) ** 2))
+    assert abs(mse_c - mse_f) / max(mse_f, 1e-12) == 0.0
+
+
+# --------------------------------------------------------------------------
+# cached-jit regression: same bucket never retraces
+# --------------------------------------------------------------------------
+
+def test_query_same_bucket_does_not_recompile(rng):
+    ops.clear_jit_caches()
+    ao_y, ao_sum_x, ao_radius, ao_origin = _forest_state(rng)  # M = 12
+    M = ao_sum_x.shape[0]
+    assert ops.query_buckets(M) == (8, 12)
+    for K in (1, 3, 5):  # all land in the K_pad = 8 bucket
+        ops.forest_best_splits(ao_y, ao_sum_x, ao_radius, ao_origin,
+                               _attempt_with_k(rng, M, K), backend="jnp")
+    handle = ops._jit_forest_query("jnp", 128, 8)
+    assert handle._cache_size() == 1, "same-bucket queries retraced"
+    # K past the last power-of-two bucket falls into the full-scan bucket
+    ops.forest_best_splits(ao_y, ao_sum_x, ao_radius, ao_origin,
+                           _attempt_with_k(rng, M, 10), backend="jnp")
+    assert ops._jit_forest_query("jnp", 128, None)._cache_size() == 1
+    assert handle._cache_size() == 1
+
+
+def test_update_same_bucket_does_not_recompile(rng):
+    ops.clear_jit_caches()
+    ao_y, ao_sum_x, ao_radius, ao_origin = _forest_state(rng)
+    M, F, C = ao_sum_x.shape
+    for B in (100, 120, 128):  # one 128-row batch bucket
+        leaf = jnp.array(rng.integers(0, M, B), jnp.int32)
+        X = jnp.array(rng.normal(0, 1, (B, F)).astype(np.float32))
+        y = jnp.array(rng.normal(0, 1, B).astype(np.float32))
+        ops.forest_update(ao_y, ao_sum_x, ao_radius, ao_origin,
+                          leaf, X, y, backend="jnp")
+    assert ops._jit_forest_update("jnp", 256, 128)._cache_size() == 1, \
+        "same-bucket batches retraced"

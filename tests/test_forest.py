@@ -69,6 +69,85 @@ def test_forest_update_stream_matches_python_loop():
         np.asarray(s_scan["trees"]["ystats"]["mean"]), rtol=1e-5, atol=1e-5)
 
 
+def test_forest_update_stream_learns_ragged_tail():
+    """N not divisible by batch_size: the scan driver processes the tail
+    as a masked final batch — identical to a python loop whose last call
+    carries the same weight-0 padding rows (same PRNG stream)."""
+    cfg = _small_cfg(n_trees=3)
+    N, bs = 700, 256                       # 2 full batches + 188 tail rows
+    X, y = synth.piecewise_regression(N, n_features=4, seed=6)
+    pad = 3 * bs - N                       # pad rows of the final batch
+    Xp = np.concatenate([X, np.zeros((pad, 4), np.float32)])
+    yp = np.concatenate([y, np.zeros(pad, np.float32)])
+    wp = (np.arange(3 * bs) < N).astype(np.float32)
+    s_loop = fr.init_forest(cfg, jax.random.PRNGKey(5))
+    upd = jax.jit(functools.partial(fr.update, cfg))
+    for i in range(3):
+        s_loop, _ = upd(s_loop, jnp.array(Xp[i * bs:(i + 1) * bs]),
+                        jnp.array(yp[i * bs:(i + 1) * bs]),
+                        w=jnp.array(wp[i * bs:(i + 1) * bs]))
+    s_scan, trace = fr.update_stream(cfg, fr.init_forest(cfg,
+                                                         jax.random.PRNGKey(5)),
+                                     jnp.array(X), jnp.array(y),
+                                     batch_size=bs)
+    assert trace["forest_mse"].shape[0] == 3     # ceil(700 / 256)
+    np.testing.assert_array_equal(np.asarray(s_loop["trees"]["n_nodes"]),
+                                  np.asarray(s_scan["trees"]["n_nodes"]))
+    np.testing.assert_allclose(
+        np.asarray(s_loop["trees"]["ystats"]["mean"]),
+        np.asarray(s_scan["trees"]["ystats"]["mean"]), rtol=1e-5, atol=1e-5)
+
+
+def test_forest_update_ignores_weight0_rows():
+    """Rows with weight 0 are invisible: garbage in the padded slots must
+    not change the learned forest, the drift windows, or the aux errors."""
+    cfg = _small_cfg(n_trees=3)
+    rng = np.random.default_rng(2)
+    X = rng.normal(0, 1, (256, 4)).astype(np.float32)
+    y = (X[:, 0] * 2).astype(np.float32)
+    w = (np.arange(256) < 200).astype(np.float32)
+    Xg, yg = X.copy(), y.copy()
+    Xg[200:] = 1e6                          # garbage in the masked rows
+    yg[200:] = -1e6
+    s0 = fr.init_forest(cfg, jax.random.PRNGKey(7))
+    s_a, aux_a = fr.update(cfg, s0, jnp.array(X), jnp.array(y),
+                           w=jnp.array(w))
+    s_b, aux_b = fr.update(cfg, s0, jnp.array(Xg), jnp.array(yg),
+                           w=jnp.array(w))
+    flat_a = jax.tree_util.tree_leaves(s_a)
+    flat_b = jax.tree_util.tree_leaves(s_b)
+    for a, b in zip(flat_a, flat_b):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(np.asarray(aux_a["member_mse"]),
+                                  np.asarray(aux_b["member_mse"]))
+
+
+def test_masked_tail_batch_cannot_fire_spurious_drift():
+    """A ragged tail batch holding one real outlier row advances the
+    drift windows by its real-mass fraction only — it must not swap a
+    trained member where the same outliers at full batch weight would."""
+    cfg = _small_cfg(n_trees=4, drift_min_batches=8, drift_kappa=3.0)
+    state = fr.init_forest(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    upd = jax.jit(functools.partial(fr.update, cfg))
+    for _ in range(25):                      # arm the long windows
+        X = rng.normal(0, 1, (256, 4)).astype(np.float32)
+        y = (np.where(X[:, 0] <= 0, 1.0, 6.0)
+             + 0.1 * rng.normal(0, 1, 256)).astype(np.float32)
+        state, aux = upd(state, jnp.array(X), jnp.array(y))
+        assert not np.asarray(aux["drift"]).any()
+    X = rng.normal(0, 1, (256, 4)).astype(np.float32)
+    y_out = (np.where(X[:, 0] <= 0, 1.0, 6.0) + 40.0).astype(np.float32)
+    w_tail = (np.arange(256) < 1).astype(np.float32)   # ONE real row
+    _, aux_tail = upd(state, jnp.array(X), jnp.array(y_out),
+                      w=jnp.array(w_tail))
+    assert not np.asarray(aux_tail["drift"]).any(), \
+        "a 1-row masked tail batch must not trip the drift detector"
+    _, aux_full = upd(state, jnp.array(X), jnp.array(y_out))
+    assert np.asarray(aux_full["drift"]).any(), \
+        "the same shift at full batch weight must still trip it"
+
+
 def test_fused_forest_matches_oracle_member_updates():
     """The flat (T*M)-table fused update == vmap of the seed oracle engine
     (same PRNG keys -> same Poisson weights -> same forests)."""

@@ -57,6 +57,33 @@ def test_tree_stationary_prediction_without_splits():
     np.testing.assert_allclose(np.asarray(pred), 7.5, rtol=1e-4)
 
 
+def test_update_stream_learns_ragged_tail():
+    """N not divisible by batch_size: the tail rides in a masked final
+    batch and must match the unpadded per-batch loop exactly."""
+    N, bs = 1000, 256                      # 3 full batches + 232 tail rows
+    X, y = synth.piecewise_regression(N, n_features=3, seed=21)
+    cfg = ht.HTRConfig(n_features=3, max_nodes=15, n_bins=32,
+                       grace_period=150, max_depth=4, r0=0.3)
+    s_loop = ht.init_state(cfg)
+    upd = jax.jit(functools.partial(ht.update, cfg))
+    for i in range(0, N, bs):              # final call sees the bare tail
+        s_loop = upd(s_loop, jnp.array(X[i:i + bs]), jnp.array(y[i:i + bs]))
+    s_scan = ht.update_stream(cfg, ht.init_state(cfg), jnp.array(X),
+                              jnp.array(y), batch_size=bs)
+    assert int(s_loop["n_nodes"]) == int(s_scan["n_nodes"])
+    np.testing.assert_array_equal(np.asarray(s_loop["ystats"]["n"]),
+                                  np.asarray(s_scan["ystats"]["n"]))
+    np.testing.assert_allclose(np.asarray(s_loop["ystats"]["mean"]),
+                               np.asarray(s_scan["ystats"]["mean"]),
+                               rtol=1e-5, atol=1e-5)
+    # and the tail genuinely changed the tree vs the old truncating driver
+    s_trunc = ht.update_stream(cfg, ht.init_state(cfg),
+                               jnp.array(X[:(N // bs) * bs]),
+                               jnp.array(y[:(N // bs) * bs]), batch_size=bs)
+    assert not np.array_equal(np.asarray(s_scan["ystats"]["n"]),
+                              np.asarray(s_trunc["ystats"]["n"]))
+
+
 def test_forest_vmap():
     """A forest is just vmap over tree states."""
     X, y = synth.piecewise_regression(4000, n_features=3, seed=7)

@@ -1,29 +1,39 @@
 """Bench-regression gate: ``PYTHONPATH=src python -m benchmarks.check_regression``.
 
-Reruns the kernel micro-benches and the attempt-fraction query sweep
-(best-of-2) and applies two checks:
+Reruns the kernel micro-benches, the attempt-fraction query sweep and
+the serving races (best-of-2) and applies two kinds of check:
 
 * **absolute band** — each row's ``us_per_call`` must stay within
   ``TOLERANCE`` (3x) of the committed ``BENCH_kernels.json`` /
-  ``BENCH_query.json`` baselines.  Deliberately wide: shared CI runners
-  and the dev sandbox swing 2-3x with load (and differ from the machine
-  that committed the baselines), so this only catches order-of-magnitude
-  breakage.  Rows without a committed baseline and accuracy-only rows
-  (``us_per_call == 0``) are reported but never fail.
-* **structural ratio** — machine-independent: at small attempt fractions
-  (K/M <= 1/8) on forests of M >= ``MIN_GATED_M`` tables, the compacted
-  query must beat the full scan measured in the SAME run by
-  ``MIN_SPEEDUP`` (1.5x).  This is the check that catches the gate's
-  actual target — compaction silently degrading to the full scan —
-  without any cross-machine wall-time comparison.  Small-M cells are
-  reported but ungated: their fixed O(M*F) gather/scatter overheads sit
-  too close to the query itself for a load-stable ratio.
+  ``BENCH_query.json`` / ``BENCH_serve.json`` baselines.  Deliberately
+  wide: shared CI runners and the dev sandbox swing 2-3x with load (and
+  differ from the machine that committed the baselines), so this only
+  catches order-of-magnitude breakage.  Rows without a committed
+  baseline and accuracy-only rows (``us_per_call == 0``) are reported
+  but never fail.
+* **structural ratios** — machine-independent, measured inside ONE run:
 
-The fresh sweep is written to ``BENCH_query.fresh.json`` (the CI
-artifact), NEVER to the committed ``BENCH_query.json`` baseline — only
-``benchmarks.run`` rewrites baselines, so running the gate locally can
-never silently shift what future runs are compared against.
-Exit code 1 on any failure.
+  - at small attempt fractions (K/M <= 1/8) on forests of
+    M >= ``MIN_GATED_M`` tables, the compacted query must beat the
+    same-run full scan by ``MIN_SPEEDUP`` (1.5x) — catches compaction
+    silently degrading to the full scan;
+  - the fused forest predict must at least MATCH the same-run per-tree
+    vmap baseline (``MIN_SERVE_SPEEDUP``, 1.0x) — catches the serving
+    engine silently degrading below the path it replaced (the committed
+    BENCH_serve.json acceptance bar is 3x; the CI floor is intentionally
+    looser so runner load cannot flake the gate, while a true fallback
+    to per-tree routing — ratio ~= 1 with noise both sides — still
+    trips it).
+
+  Small-M query cells are reported but ungated: their fixed O(M*F)
+  gather/scatter overheads sit too close to the query itself for a
+  load-stable ratio.
+
+The fresh sweeps are written to ``BENCH_query.fresh.json`` /
+``BENCH_serve.fresh.json`` (the CI artifacts), NEVER to the committed
+baselines — only ``benchmarks.run`` rewrites baselines, so running the
+gate locally can never silently shift what future runs are compared
+against.  Exit code 1 on any failure.
 """
 from __future__ import annotations
 
@@ -31,13 +41,15 @@ import json
 import os
 import sys
 
-from benchmarks import kernels, query_sweep
+from benchmarks import kernels, query_sweep, serve
 from benchmarks.bench_io import REPO_ROOT, write_bench
 
-BASELINES = ("BENCH_kernels.json", "BENCH_query.json")
+BASELINES = ("BENCH_kernels.json", "BENCH_query.json", "BENCH_serve.json")
 FRESH_ARTIFACT = "BENCH_query.fresh.json"
+SERVE_FRESH_ARTIFACT = "BENCH_serve.fresh.json"
 TOLERANCE = 3.0
 MIN_SPEEDUP = 1.5          # compacted vs full scan, same run, K/M <= 1/8
+MIN_SERVE_SPEEDUP = 1.0    # fused forest predict vs same-run per-tree vmap
 SMALL_FRACTIONS = ("1/64", "1/8")
 MIN_GATED_M = 128          # the acceptance-criterion scale (M = 255)
 
@@ -82,6 +94,9 @@ def main() -> int:
     qrows, qreports = _best_of(query_sweep.run, query_sweep.to_rows)
     fresh.extend(qrows)
     write_bench(FRESH_ARTIFACT, qrows)       # the uploaded artifact
+    srows, sreports = _best_of(serve.run, serve.to_rows)
+    fresh.extend(srows)
+    write_bench(SERVE_FRESH_ARTIFACT, srows)
 
     failures = []
     print(f"{'row':<42} {'committed':>10} {'fresh':>10} {'ratio':>7}  verdict")
@@ -117,6 +132,18 @@ def main() -> int:
             failures.append(
                 f"query_{name}: compacted only {sp:.2f}x the full scan at "
                 f"K/M = {frac} (structural floor {MIN_SPEEDUP}x)")
+
+    # serving structural check: the fused forest predict must not fall
+    # below the same-run per-tree vmap baseline it replaced
+    sp = max(rep["forest_predict"]["speedup_vs_pertree"] for rep in sreports)
+    ok = sp >= MIN_SERVE_SPEEDUP
+    print(f"\n{'serve race':<42} {'speedup vs per-tree':>22}  verdict")
+    print(f"{'serve_forest_predict_fused':<42} {sp:>21.2f}x  "
+          f"{'ok' if ok else 'REGRESSION'}")
+    if not ok:
+        failures.append(
+            f"serve_forest_predict_fused: only {sp:.2f}x the same-run "
+            f"per-tree baseline (structural floor {MIN_SERVE_SPEEDUP}x)")
 
     if failures:
         print(f"\n{len(failures)} check(s) failed:", file=sys.stderr)

@@ -17,7 +17,8 @@ from repro.models import layers as L
 
 L.set_compute_dtype(jnp.float32)  # CPU container cannot execute bf16 dots
 
-from benchmarks import aos, forest, kernels, query_sweep, roofline, tree  # noqa: E402
+from benchmarks import (aos, forest, kernels, query_sweep, roofline,  # noqa: E402
+                        serve, tree)
 from benchmarks.bench_io import write_bench as _write_bench  # noqa: E402
 
 
@@ -86,6 +87,13 @@ def main() -> None:
     ]
     csv.extend(forest_rows)
     _write_bench("BENCH_forest.json", forest_rows)
+
+    # --- serving: fused routing + frozen snapshots (read path) ------------
+    srep = serve.run()
+    report["serve"] = srep
+    serve_rows = serve.to_rows(srep)
+    csv.extend(serve_rows)
+    _write_bench("BENCH_serve.json", serve_rows)
 
     # --- kernel micro-benches ---------------------------------------------
     krep = kernels.run()

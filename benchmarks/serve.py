@@ -1,0 +1,175 @@
+"""Serving benchmark: the fused inference engine vs the seed read path.
+
+Three same-run races on trained models (equality-gated — every fused
+path must reproduce the scalar oracle's predictions BIT-identically
+before any clock starts), interleaved best-of-``trials`` so machine-load
+drift hits both sides of each race equally:
+
+* **tree route** — the §2.6 batched routing dispatch
+  (``hoeffding._route``: cached jits, realized-depth ply bucket, one
+  packed-row gather per ply) vs the seed's jitted vmap-of-scalar
+  ``fori_loop`` walk over ``cfg.max_depth`` (``kernels.ref.route_ref``
+  — the seed cannot trim: its ply count is baked into the jit);
+* **forest predict** — the fused live read path (``forest.predict``:
+  ONE folded-axis route for all T members + carried vote weights) vs
+  the per-tree baseline the seed served (vmapped scalar member routes +
+  vote weights re-derived per call);
+* **snapshot predict** — ``serve.predict_snapshot`` on the frozen
+  breadth-first snapshot vs the fused live-state predict it was frozen
+  from (what the §5.5 trim + pre-gather buy on top of fused routing).
+
+Acceptance (ISSUE 4): fused forest predict >= 3x the per-tree baseline
+at T = 16; fused tree routing >= 2x the scalar walk.
+"""
+from __future__ import annotations
+
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import forest as fr
+from repro.core import hoeffding as ht
+from repro.core import serve as sv
+from repro.kernels import ops as kops
+from repro.kernels import ref as kref
+
+
+def _time(f, *args, iters=20):
+    jax.block_until_ready(f(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        r = f(*args)
+    jax.block_until_ready(r)
+    return (time.perf_counter() - t0) / iters
+
+
+def _race(fast, slow, trials):
+    """Interleaved best-of-``trials`` of two thunks -> (t_fast, t_slow)."""
+    tf, ts = [], []
+    for _ in range(trials):
+        tf.append(_time(*fast))
+        ts.append(_time(*slow))
+    return float(np.min(tf)), float(np.min(ts))
+
+
+def plateau_stream(n: int, n_features: int = 8, levels: int = 5,
+                   seed: int = 11, noise: float = 0.1):
+    """Balanced plateau concept: y is set by the sign pattern of the
+    first ``levels`` features — the generating tree is COMPLETE at depth
+    ``levels`` (2^levels plateaus), so a capacity-63 Hoeffding tree
+    realizes a shallow, balanced shape far below ``cfg.max_depth``.
+    That gap is exactly what the serving engine exploits (realized-depth
+    ply trim) and what the seed's scalar walk, jitted with
+    ``max_depth + 1`` plies baked in, cannot."""
+    rng = np.random.default_rng(seed)
+    X = rng.normal(0, 1, (n, n_features)).astype(np.float32)
+    bits = (X[:, :levels] > 0) @ (2.0 ** np.arange(levels))
+    y = (bits + noise * rng.normal(0, 1, n)).astype(np.float32)
+    return X, y
+
+
+def run(n=12288, n_features=8, n_trees=16, B=8192, trials=5):
+    tcfg = ht.HTRConfig(n_features=n_features, max_nodes=63, n_bins=48,
+                        grace_period=300, max_depth=12, r0=0.25)
+    X, y = plateau_stream(n, n_features=n_features, seed=11)
+    Xq = jnp.array(np.random.default_rng(5).normal(
+        0, 1, (B, n_features)).astype(np.float32))   # the request batch
+
+    # --- train once: a single tree and a T-member forest ------------------
+    tstate = ht.update_stream(tcfg, ht.init_state(tcfg),
+                              jnp.array(X), jnp.array(y))
+    # full subspaces: the members' realized depth reflects the concept,
+    # not random feature masking (subspace diversity is a learning knob,
+    # orthogonal to the read path this benchmark measures)
+    fcfg = fr.ForestConfig(tree=tcfg, n_trees=n_trees, subspace=1.0)
+    fstate = fr.init_forest(fcfg, jax.random.PRNGKey(0))
+    fstate, _ = fr.update_stream(fcfg, fstate, jnp.array(X), jnp.array(y))
+    jax.block_until_ready(fstate["trees"]["n_nodes"])
+    realized = int(fstate["trees"]["depth"].max())
+
+    # --- race 1: fused tree route vs the seed's scalar walk ---------------
+    # the engine's serving contract: realized depth is probed once per
+    # model refresh (it is static metadata, baked into snapshots) and the
+    # per-request dispatch is one cached-jit call; the seed's walk is
+    # jitted once with max_depth + 1 plies baked in (it cannot trim)
+    tree_depth = min(tcfg.max_depth, int(tstate["depth"].max()))
+    fused_route = functools.partial(
+        kops.route, tstate["feature"], tstate["threshold"],
+        tstate["child"], tstate["is_leaf"], depth=tree_depth)
+    scalar_route = jax.jit(functools.partial(
+        kref.route_ref, tstate["feature"], tstate["threshold"],
+        tstate["child"], tstate["is_leaf"], max_depth=tcfg.max_depth))
+    np.testing.assert_array_equal(np.asarray(fused_route(Xq)),
+                                  np.asarray(scalar_route(Xq)))
+    t_route, t_scalar = _race((fused_route, Xq), (scalar_route, Xq), trials)
+
+    # --- race 2: fused forest predict vs the per-tree vmap baseline -------
+    ocfg = fr.ForestConfig(
+        tree=ht.HTRConfig(n_features=n_features, max_nodes=63, n_bins=48,
+                          grace_period=300, max_depth=12, r0=0.25,
+                          split_backend="oracle"), n_trees=n_trees)
+
+    def _pertree_predict(state, Xb):
+        # the pre-engine read path: T vmapped scalar walks + vote weights
+        # re-derived from the error windows on every call
+        yhat = jax.vmap(functools.partial(ht.predict, ocfg.tree),
+                        in_axes=(0, None))(state["trees"], Xb)
+        return fr._vote_combine(yhat, fr.vote_weights(ocfg, state), None)
+
+    pertree = jax.jit(_pertree_predict)
+    fused = functools.partial(fr.predict, fcfg, fstate)
+    np.testing.assert_array_equal(np.asarray(fused(Xq)),
+                                  np.asarray(pertree(fstate, Xq)))
+    t_fused, t_pertree = _race((fused, Xq), (pertree, fstate, Xq), trials)
+
+    # --- race 3: frozen snapshot vs the fused live state ------------------
+    snap = sv.freeze(fstate)
+    snap_pred = functools.partial(sv.predict_snapshot, snap)
+    np.testing.assert_array_equal(np.asarray(snap_pred(Xq)),
+                                  np.asarray(fused(Xq)))
+    t_snap, t_live = _race((snap_pred, Xq), (fused, Xq), trials)
+
+    return {
+        "B": B, "n_trees": n_trees, "trials": trials,
+        "max_depth": tcfg.max_depth, "realized_depth": realized,
+        "snapshot_nodes": int(snap.feature.shape[1]),
+        "snapshot_depth": snap.depth,
+        "tree_route": {
+            "fused_us": t_route * 1e6, "scalar_us": t_scalar * 1e6,
+            "rows_per_s": B / t_route,
+            "speedup_vs_scalar": t_scalar / t_route},
+        "forest_predict": {
+            "fused_us": t_fused * 1e6, "pertree_us": t_pertree * 1e6,
+            "rows_per_s": B / t_fused,
+            "speedup_vs_pertree": t_pertree / t_fused},
+        "snapshot_predict": {
+            "snapshot_us": t_snap * 1e6, "live_us": t_live * 1e6,
+            "rows_per_s": B / t_snap,
+            "speedup_vs_live": t_live / t_snap},
+    }
+
+
+def to_rows(report):
+    """BENCH_serve.json rows (name, us_per_call, derived)."""
+    tr, fp, sp = (report["tree_route"], report["forest_predict"],
+                  report["snapshot_predict"])
+    B = report["B"]
+    return [
+        ("serve_tree_route_fused", tr["fused_us"],
+         f"B={B} rows_per_s={tr['rows_per_s']:.0f}"
+         f" speedup_vs_scalar={tr['speedup_vs_scalar']:.2f}"),
+        ("serve_tree_route_scalar", tr["scalar_us"],
+         f"B={B} seed vmap-of-fori walk, max_depth={report['max_depth']}"),
+        ("serve_forest_predict_fused", fp["fused_us"],
+         f"B={B} T={report['n_trees']} rows_per_s={fp['rows_per_s']:.0f}"
+         f" speedup_vs_pertree={fp['speedup_vs_pertree']:.2f}"),
+        ("serve_forest_predict_pertree", fp["pertree_us"],
+         f"B={B} T={report['n_trees']} per-tree vmap baseline"),
+        ("serve_snapshot_predict", sp["snapshot_us"],
+         f"B={B} nodes={report['snapshot_nodes']}"
+         f" depth={report['snapshot_depth']}"
+         f" speedup_vs_live={sp['speedup_vs_live']:.2f}"),
+    ]

@@ -156,6 +156,10 @@ def init_forest(cfg: ForestConfig, key) -> ForestState:
                   draws stay independent per member and per shard)
     ``err_win``   Stats (T,) — long prequential-error window since reset
     ``err_ewma``  (T,) f32 — short (EWMA) prequential-error window
+    ``vote_w``    (T,) f32 — member vote weights, refreshed once per
+                  ``update`` from the error windows (the serving read
+                  path and :mod:`repro.core.serve` snapshots consume
+                  them for free instead of recomputing per call)
     ``resets``    (T,) i32 — drift-reset count (diagnostics)
     """
     T, F = cfg.n_trees, cfg.tree.n_features
@@ -171,25 +175,51 @@ def init_forest(cfg: ForestConfig, key) -> ForestState:
         "keys": jax.random.split(keys[0], T),
         "err_win": stats.init((T,)),
         "err_ewma": jnp.zeros((T,), jnp.float32),
+        "vote_w": jnp.zeros((T,), jnp.float32),   # == vote_weights(fresh)
         "resets": jnp.zeros((T,), jnp.int32),
     }
 
 
 def member_predictions(cfg: ForestConfig, state: ForestState,
                        X: jax.Array) -> jax.Array:
-    """(T, B) f32 — every member's prediction for every row of X (B, F)."""
-    return jax.vmap(functools.partial(ht.predict, cfg.tree),
-                    in_axes=(0, None))(state["trees"], X)
+    """(T, B) f32 — every member's prediction for every row of X (B, F).
+
+    ONE fused route for the whole ensemble: the tree axis folds into the
+    routing kernel's node axis (:func:`repro.kernels.ops.forest_route`,
+    the read-side twin of the §5.1 table fold), then every member's leaf
+    means gather in one take — no per-tree dispatch, no vmapped scalar
+    walk.  ``split_backend="oracle"`` keeps the seed's vmap-of-scalar
+    engine as the correctness reference.  Concrete states route with a
+    sweep trimmed to the deepest member's *realized* depth.
+    """
+    trees = state["trees"]
+    backend = cfg.tree.split_backend
+    if backend == "oracle":
+        return jax.vmap(functools.partial(ht.predict, cfg.tree),
+                        in_axes=(0, None))(trees, X)
+    depth = cfg.tree.max_depth
+    if not kops._is_traced(trees["feature"], trees["depth"], X):
+        depth = min(depth, int(trees["depth"].max()))
+    leaf = kops.forest_route(trees["feature"], trees["threshold"],
+                             trees["child"], trees["is_leaf"], X,
+                             depth=depth, backend=backend)
+    return jnp.take_along_axis(trees["ystats"]["mean"], leaf, axis=1)
 
 
 def vote_weights(cfg: ForestConfig, state: ForestState) -> jax.Array:
-    """(T,) f32 un-normalized member vote weights.
+    """(T,) f32 un-normalized member vote weights from the error windows.
 
     ``inverse_error`` weights a member by
     ``(1 / (EWMA prequential MSE + eps)) ** vote_power``; members with no
     error history yet (fresh after init or a drift reset) vote 0 so a
     just-reset blank tree cannot drag the ensemble (an all-fresh forest
     predicts 0 either way; :func:`predict` guards the 0/0).
+
+    :func:`update` calls this ONCE per learned batch and carries the
+    result in ``state["vote_w"]``; the read path (:func:`predict`, the
+    prequential vote inside :func:`update`, :func:`repro.core.serve`
+    snapshots) consumes the carried weights instead of re-deriving them
+    per prediction call.
     """
     T = state["err_ewma"].shape[0]
     if cfg.vote == "mean":
@@ -216,6 +246,20 @@ def _vote_combine(yhat, wts, axis_name):
     return num / jnp.maximum(den, 1e-12)
 
 
+@kops.register_jit_cache
+@functools.lru_cache(maxsize=None)
+def _jit_predict_live(backend: str, plies: int):
+    """Cached jit of the whole live read path for one (backend,
+    ply-bucket): serving a live forest dispatches ONE compiled program
+    per call instead of an eager epilogue.  The body IS the snapshot
+    serving body (:func:`repro.core.serve._predict_impl` — route ->
+    gather -> vote), traced over the live state's full-capacity tables,
+    so the two read paths can never diverge."""
+    from repro.core import serve as sv
+    return jax.jit(functools.partial(sv._predict_impl, plies=plies,
+                                     backend=backend, single=False))
+
+
 def predict(cfg: ForestConfig, state: ForestState, X: jax.Array,
             axis_name: str | None = None) -> jax.Array:
     """Forest prediction: the vote-weighted mean of member predictions.
@@ -223,9 +267,31 @@ def predict(cfg: ForestConfig, state: ForestState, X: jax.Array,
     X: (B, F) -> (B,) f32.  ``axis_name``: when the tree axis is split
     over devices with ``shard_map``, pass the mesh axis name — the only
     cross-tree communication in the whole forest is this one psum pair.
+    Reads the ``vote_w`` carried by the last :func:`update` (refreshed
+    once per learned batch), so serving pays one fused route + one
+    gather + one reduce per call and nothing else.  Called with a
+    concrete state (the live-serving pattern) the whole read path
+    dispatches as ONE cached jit, routing trimmed to the deepest
+    member's *realized* depth; results are bit-identical to the traced
+    composition.  (The trim costs one tiny device reduce + host sync
+    per call — the price of tracking a still-training state; freezing
+    with :mod:`repro.core.serve` bakes the depth in as static metadata
+    and drops the probe, so prefer snapshots for a frozen model.)
     """
+    backend = cfg.tree.split_backend
+    trees = state["trees"]
+    X = jnp.asarray(X, jnp.float32)
+    if (axis_name is None and backend != "oracle"
+            and not kops._is_traced(trees["feature"], state["vote_w"], X)):
+        depth = min(cfg.tree.max_depth, int(trees["depth"].max()))
+        X, B, padded = kops.pad_rows_pow2(X)
+        out = _jit_predict_live(
+            kops.resolve_backend(backend), kops.depth_bucket(depth))(
+            trees["feature"], trees["threshold"], trees["child"],
+            trees["is_leaf"], trees["ystats"]["mean"], state["vote_w"], X)
+        return out[:B] if padded else out
     return _vote_combine(member_predictions(cfg, state, X),
-                         vote_weights(cfg, state), axis_name)
+                         state["vote_w"], axis_name)
 
 
 def _fused_member_update(cfg: ForestConfig, trees, feat_mask, X, y, w):
@@ -247,7 +313,11 @@ def _fused_member_update(cfg: ForestConfig, trees, feat_mask, X, y, w):
     tcfg = cfg.tree
     M, F = tcfg.max_nodes, tcfg.n_features
     T = feat_mask.shape[0]
-    leaf = jax.vmap(lambda t: ht._route(t, X, tcfg.max_depth))(trees)
+    # ONE fused route for all T trees (the §2.6 folded-node-axis sweep)
+    leaf = kops.forest_route(trees["feature"], trees["threshold"],
+                             trees["child"], trees["is_leaf"], X,
+                             depth=tcfg.max_depth,
+                             backend=tcfg.split_backend)
 
     # global leaf ids fold the tree axis into the table axis
     gl = (jnp.arange(T, dtype=leaf.dtype)[:, None] * M + leaf).reshape(-1)
@@ -326,7 +396,7 @@ def update(cfg: ForestConfig, state: ForestState, X: jax.Array,
     # --- test: prequential member + forest errors on the raw stream ------
     yhat = member_predictions(cfg, state, X)                   # (T, B)
     member_mse = (row_w[None, :] * (yhat - y[None, :]) ** 2).sum(1) / wsum
-    fpred = _vote_combine(yhat, vote_weights(cfg, state), axis_name)
+    fpred = _vote_combine(yhat, state["vote_w"], axis_name)
     forest_mse = (row_w * (fpred - y) ** 2).sum() / wsum
 
     # --- train: Poisson(λ) bagging weights, one fused member update ------
@@ -410,6 +480,9 @@ def update(cfg: ForestConfig, state: ForestState, X: jax.Array,
         "err_ewma": jnp.where(drift, 0.0, ewma),
         "resets": state["resets"] + drift.astype(jnp.int32),
     }
+    # vote weights refresh ONCE per learned batch; every read (predict,
+    # the next batch's prequential vote, serve.freeze) reuses them
+    state["vote_w"] = vote_weights(cfg, state)
     return state, {"member_mse": member_mse, "forest_mse": forest_mse,
                    "drift": drift}
 

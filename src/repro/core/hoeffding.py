@@ -5,8 +5,9 @@ regression where every leaf carries one Attribute Observer per numeric
 feature.  Here the whole tree is a fixed-capacity array structure and the
 hot path is three explicit stages (DESIGN.md §2.3):
 
-* **route**   — leaf index per batch row, a depth-bounded vectorized gather
-  loop;
+* **route**   — leaf index per batch row through the batched
+  level-synchronous routing engine (:func:`repro.kernels.ops.route`, one
+  fused transition sweep for the whole batch — DESIGN.md §2.6);
 * **absorb**  — ALL (leaf x feature) QO tables update in one fused pass
   through :func:`repro.kernels.ops.forest_update` (a Pallas kernel on TPU,
   an XLA-fused segment-reduction elsewhere);
@@ -130,26 +131,41 @@ def init_state(cfg: HTRConfig) -> TreeState:
     }
 
 
-def _route(state: TreeState, X: jax.Array, max_depth: int) -> jax.Array:
-    """Leaf index for each row of X.  X: (B, F) -> (B,) int32."""
-    def one(x):
-        def body(_, node):
-            f = state["feature"][node]
-            go_left = x[f] <= state["threshold"][node]
-            nxt = jnp.where(go_left, state["child"][node, 0],
-                            state["child"][node, 1])
-            return jnp.where(state["is_leaf"][node], node, nxt)
-        return jax.lax.fori_loop(0, max_depth + 1, body, jnp.int32(0))
-    return jax.vmap(one)(X)
+def _route(state: TreeState, X: jax.Array, max_depth: int,
+           backend: str = "auto") -> jax.Array:
+    """Leaf index for each row of X.  X: (B, F) -> (B,) int32.
+
+    Dispatches to the batched level-synchronous routing engine
+    (:func:`repro.kernels.ops.route` — one fused transition sweep for the
+    whole batch, DESIGN.md §2.6); ``backend="oracle"`` keeps the seed's
+    vmap-of-scalar ``fori_loop`` walk (:func:`repro.kernels.ref.route_ref`)
+    as the correctness reference.  Called with a concrete state the sweep
+    is trimmed to the tree's *realized* depth (extra plies are self-loop
+    no-ops, so results are bit-identical) and dispatched through cached
+    jits bucketed on (batch, ply count) — the serving path never
+    recompiles per request size.
+    """
+    if backend == "oracle":
+        return kref.route_ref(state["feature"], state["threshold"],
+                              state["child"], state["is_leaf"], X, max_depth)
+    depth = max_depth
+    if not kops._is_traced(state["feature"], state["depth"], X):
+        depth = min(max_depth, int(state["depth"].max()))
+    return kops.route(state["feature"], state["threshold"], state["child"],
+                      state["is_leaf"], X, depth=depth, backend=backend)
 
 
 def predict(cfg: HTRConfig, state: TreeState, X: jax.Array) -> jax.Array:
     """Mean-of-leaf (centroid) prediction, the paper's §2 framing.
 
     X: (B, F) f32 — returns (B,) f32 leaf-mean predictions (0.0 from an
-    untrained root).
+    untrained root).  Routes through the batched engine selected by
+    ``cfg.split_backend`` (``"oracle"`` keeps the seed's scalar walk);
+    for repeated serving of a *frozen* state prefer
+    :mod:`repro.core.serve`, which also trims storage to the realized
+    tree and pre-gathers the leaf means.
     """
-    leaf = _route(state, X, cfg.max_depth)
+    leaf = _route(state, X, cfg.max_depth, cfg.split_backend)
     return state["ystats"]["mean"][leaf]
 
 
@@ -444,7 +460,7 @@ def update(cfg: HTRConfig, state: TreeState, X: jax.Array, y: jax.Array,
     w = jnp.ones_like(y) if w is None \
         else jnp.asarray(w, jnp.float32).reshape(-1)
 
-    leaf = _route(state, X, cfg.max_depth)                      # (B,)
+    leaf = _route(state, X, cfg.max_depth, cfg.split_backend)   # (B,)
 
     # --- leaf target statistics (predictor + split-variance source) ------
     batch_leaf = _segment_stats(y, leaf, M, w)

@@ -3,5 +3,6 @@
 #   qo_query.py         — single-table split query (Algorithm 2)
 #   qo_update_leaves.py — forest-scale insert: every (leaf, feature) table
 #   qo_query_batched.py — forest-scale query with attempt masking
+#   qo_route.py         — level-synchronous batched routing (read path)
 #   ops.py              — public wrappers (pallas | interpret | jnp backends)
 #   ref.py              — pure-jnp oracles delegating to repro.core.qo

@@ -42,10 +42,13 @@ from repro.kernels.qo_query import qo_query_pallas
 from repro.kernels.qo_update_leaves import (
     pack_forest, unpack_forest, qo_update_leaves_pallas, round_up)
 from repro.kernels.qo_query_batched import qo_query_batched_pallas
+from repro.kernels.qo_route import (
+    fold_route_tables, pack_route_attrs, qo_route_pallas)
 
 __all__ = [
     "qo_update", "qo_best_split", "default_interpret", "resolve_backend",
     "forest_bin_ids", "forest_update", "forest_best_splits",
+    "route", "forest_route", "depth_bucket",
     "query_buckets", "clear_jit_caches", "QUERY_MIN_BUCKET",
 ]
 
@@ -354,11 +357,197 @@ def _jit_forest_query(backend: str, tile_m: int, kpad: int | None):
     return jax.jit(functools.partial(fn, backend=backend, tile_m=tile_m))
 
 
+# --------------------------------------------------------------------------
+# batched routing: the read-path primitive (DESIGN.md §2.6)
+# --------------------------------------------------------------------------
+
+def depth_bucket(depth: int) -> int:
+    """Even-ply bucket for the routing dispatch: extra plies are self-loop
+    no-ops (leaves re-select themselves), so rounding the ply count up is
+    free of correctness cost; rounding to the next even count bounds the
+    compile cache to max_depth/2 programs per backend while wasting at
+    most one ply (a power-of-two ladder would route a depth-9 tree with
+    16 plies — 7 wasted memory passes on the serving hot loop)."""
+    return max(0, depth + (depth & 1))
+
+
+def _forest_route_jnp(feature, threshold, child, is_leaf, X, *, plies: int):
+    """Fused-jnp lowering: a fully vectorized (T, B) transition sweep.
+
+    Three takes per ply replace the oracle's six (feature, threshold,
+    left, right, is_leaf, x): children are allocated in pairs (right =
+    left + 1, see ``hoeffding._split_decision``), so feature and the
+    right-child id pack into ONE int32 payload ``fc = right * Fp + f``
+    (Fp = features rounded to a power of two — id extraction is two bit
+    ops, and T*M*Fp stays far below 2^31 for any real forest), the
+    transition becomes the branch-free
+
+        node' = (fc >> log2(Fp)) - (x[f] <= threshold)
+
+    and leaves self-loop with ``fc = self * Fp``, ``threshold = NaN``
+    (``x <= NaN`` is False for EVERY x — including -inf, which a -inf
+    sentinel would get wrong since ``-inf <= -inf`` is True — and for
+    NaN itself, matching the oracle's NaN-goes-right convention
+    bit-for-bit).  The X take flattens to one 1D gather
+    (``row * F + f``), and the ply loop is unrolled (``plies`` is static
+    and small) so XLA fuses the sweep with no ``fori_loop`` re-entry.
+    """
+    T, M = feature.shape
+    B, F = X.shape
+    N = T * M
+    Fp = max(2, 1 << (F - 1).bit_length())
+    shift = Fp.bit_length() - 1
+    featg, thr, left, right = fold_route_tables(feature, threshold, child,
+                                                is_leaf)
+    self_loop = left == jnp.arange(N, dtype=jnp.int32)            # leaves
+    fc = jnp.where(self_loop, left * Fp, right * Fp + featg)
+    thr = jnp.where(self_loop, jnp.nan, thr)
+    xf = X.reshape(-1)
+    cols = jnp.tile(jnp.arange(B, dtype=jnp.int32) * F, T)        # (T*B,)
+    offs = (jnp.arange(T, dtype=jnp.int32) * M)[:, None]          # (T, 1)
+    node = jnp.broadcast_to(offs, (T, B)).reshape(-1)             # roots
+    for _ in range(plies):
+        fcv = fc[node]
+        xv = xf[cols + (fcv & (Fp - 1))]
+        node = (fcv >> shift) - (xv <= thr[node])
+    return node.reshape(T, B) - offs
+
+
+def _forest_route_impl(feature, threshold, child, is_leaf, X, *,
+                       plies: int, backend: str, tile_b: int):
+    """Backend dispatch body of :func:`forest_route` (inputs normalized)."""
+    if backend == "jnp":
+        return _forest_route_jnp(feature, threshold, child, is_leaf, X,
+                                 plies=plies)
+    T, M = feature.shape
+    B, F = X.shape
+    attrs = pack_route_attrs(feature, threshold, child, is_leaf,
+                             n_pad=round_up(T * M, 128))
+    tile_b = min(tile_b, round_up(B, 128))
+    Bp, Fp = round_up(B, tile_b), round_up(F, 128)
+    Xp = jnp.zeros((Bp, Fp), jnp.float32).at[:B, :F].set(X)
+    node0 = jnp.broadcast_to(
+        (jnp.arange(T, dtype=jnp.int32) * M)[:, None], (T, Bp))
+    out = qo_route_pallas(node0, Xp, attrs, plies=plies, tile_b=tile_b,
+                          interpret=(backend == "interpret"))
+    return out[:, :B] - (jnp.arange(T, dtype=jnp.int32) * M)[:, None]
+
+
+def pad_rows_pow2(X, lo: int = 128):
+    """Pad request rows up to their power-of-two batch bucket — the one
+    dispatch prologue every concrete read-path entry point shares.
+    Returns ``(padded X, original B, padded?)``; pad rows are zero and
+    the callers slice ``[:B]`` back iff padding happened."""
+    B, F = X.shape
+    Bp = _pow2_bucket(max(B, lo), lo)
+    if Bp == B:
+        return X, B, False
+    return jnp.concatenate([X, jnp.zeros((Bp - B, F), X.dtype)]), B, True
+
+
+@functools.lru_cache(maxsize=None)
+def _jit_route(backend: str, tile_b: int, plies: int):
+    """Cached jit of one routing ply bucket; the inner jit cache is keyed
+    on shapes, which the public wrapper buckets."""
+    return jax.jit(functools.partial(_forest_route_impl, backend=backend,
+                                     tile_b=tile_b, plies=plies))
+
+
+@functools.lru_cache(maxsize=None)
+def _jit_route_single(backend: str, tile_b: int, plies: int):
+    """Single-tree twin of :func:`_jit_route`: the (M,) -> (T=1, M) axis
+    expansion happens inside the trace (free), not as per-call eager
+    reshapes on the serving hot path."""
+    def impl(feature, threshold, child, is_leaf, X):
+        return _forest_route_impl(
+            feature[None], threshold[None], child[None], is_leaf[None], X,
+            plies=plies, backend=backend, tile_b=tile_b)[0]
+    return jax.jit(impl)
+
+
+def forest_route(feature, threshold, child, is_leaf, X, *,
+                 depth: int, backend: str | None = None,
+                 tile_b: int = 256) -> jax.Array:
+    """Route a batch through T trees at once — (T, B) i32 leaf ids.
+
+    feature/threshold/is_leaf: (T, M); child: (T, M, 2) with -1 at
+    leaves; X: (B, F) f32, shared by every tree; ``depth``: static upper
+    bound on any leaf's depth (transition steps past a leaf self-loop, so
+    any bound >= the realized depth returns bit-identical ids — callers
+    with concrete states pass the *realized* depth, e.g.
+    :func:`repro.core.serve.predict_snapshot`).
+
+    Called with concrete arrays this dispatches through cached jits keyed
+    on (backend, even-ply depth bucket) with the batch padded to a
+    power-of-two bucket (pad rows route from the root and are sliced
+    off), so serving never recompiles per request size.  Under an
+    enclosing trace it inlines with ``plies = depth`` exactly, so a
+    jitted training step fuses the whole sweep.
+    """
+    backend = resolve_backend(backend)
+    feature = jnp.asarray(feature, jnp.int32)
+    threshold = jnp.asarray(threshold, jnp.float32)
+    child = jnp.asarray(child, jnp.int32)
+    is_leaf = jnp.asarray(is_leaf, jnp.bool_)
+    X = jnp.asarray(X, jnp.float32)
+    if _is_traced(feature, threshold, child, is_leaf, X):
+        return _forest_route_impl(feature, threshold, child, is_leaf, X,
+                                  plies=depth, backend=backend,
+                                  tile_b=tile_b)
+    X, B, padded = pad_rows_pow2(X)
+    out = _jit_route(backend, tile_b, depth_bucket(depth))(
+        feature, threshold, child, is_leaf, X)
+    return out[:, :B] if padded else out
+
+
+def route(feature, threshold, child, is_leaf, X, *, depth: int,
+          backend: str | None = None, tile_b: int = 256) -> jax.Array:
+    """Single-tree batched routing — (B,) i32 leaf ids.
+
+    The T = 1 view of :func:`forest_route` (same bucketing, same folded
+    sweep): feature/threshold/is_leaf: (M,); child: (M, 2); X: (B, F).
+    The concrete dispatch keeps the tree-axis expansion inside its
+    cached jit, so the serving hot path pays exactly one dispatch.
+    """
+    backend = resolve_backend(backend)
+    feature = jnp.asarray(feature, jnp.int32)
+    threshold = jnp.asarray(threshold, jnp.float32)
+    child = jnp.asarray(child, jnp.int32)
+    is_leaf = jnp.asarray(is_leaf, jnp.bool_)
+    X = jnp.asarray(X, jnp.float32)
+    if _is_traced(feature, threshold, child, is_leaf, X):
+        return _forest_route_impl(feature[None], threshold[None],
+                                  child[None], is_leaf[None], X,
+                                  plies=depth, backend=backend,
+                                  tile_b=tile_b)[0]
+    X, B, padded = pad_rows_pow2(X)
+    out = _jit_route_single(backend, tile_b, depth_bucket(depth))(
+        feature, threshold, child, is_leaf, X)
+    return out[:B] if padded else out
+
+
+_JIT_CACHES = []
+
+
+def register_jit_cache(fn):
+    """Register an ``lru_cache``-wrapped jit factory with the shared
+    clear hook (the serving layers add theirs on import, so one call
+    resets every cached dispatch in the process)."""
+    _JIT_CACHES.append(fn)
+    return fn
+
+
+register_jit_cache(_jit_forest_update)
+register_jit_cache(_jit_forest_query)
+register_jit_cache(_jit_route)
+register_jit_cache(_jit_route_single)
+
+
 def clear_jit_caches() -> None:
     """Drop the cached-jit entry points (test hook: lets a fresh trace see
     monkeypatched query/update internals and resets ``_cache_size``)."""
-    _jit_forest_update.cache_clear()
-    _jit_forest_query.cache_clear()
+    for fn in _JIT_CACHES:
+        fn.cache_clear()
 
 
 def forest_best_splits(ao_y, ao_sum_x, ao_radius, ao_origin, attempt, *,

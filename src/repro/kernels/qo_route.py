@@ -1,0 +1,162 @@
+"""Pallas TPU kernel: level-synchronous batched routing for T trees at once.
+
+The read path's hot loop (DESIGN.md §2.6).  The seed routed with
+``vmap``-of-scalar ``fori_loop`` — per-row dependent gathers through five
+separate node arrays, re-dispatched per tree by the forest layer.  Here
+routing is the batch-parallel primitive (Pham et al.'s massively-parallel
+traversal model, PAPERS.md): ALL B rows advance through ALL T trees one
+depth ply at a time over a folded SoA node table, one ``pallas_call`` with
+
+    grid = (T, batch-tiles)
+
+so each grid step owns one tree's (tile_b,) slice of row states while the
+(tile_b, Fp) X block is shared across the T grid dimension — the batch is
+never materialized T times.  Node attributes pack into one dense plane:
+
+    attrs : (Np, 128) f32
+      lane 0: feature   lane 1: threshold   lane 2: left    lane 3: right
+
+with the tree axis folded into global node ids (tree t's node j is row
+``t*M + j`` — the same folded-axis layout as the §5.1 table kernels) and
+leaves self-looped (``left = right = self``), so a settled row keeps
+re-selecting its own leaf and no ``is_leaf`` test exists at all.  Per ply
+the whole transition is one MXU contraction and one compare:
+
+    oh_node : (tile_b, Np)   row r -> its current node
+    a       = oh_node @ attrs                      (tile_b, 128) on the MXU
+    x_r     = sum(onehot(feature_r) * X_r)         per-row feature select
+    node'   = where(x_r <= threshold_r, left_r, right_r)
+
+The one-hot matmul is exact (a single 1.0 per row), so thresholds and
+integer ids round-trip bit-identically; routing therefore matches the
+scalar oracle id-for-id on every backend.  ``plies`` (the ply count) is
+static — any count >= the realized tree depth returns identical leaves,
+which is what lets ops.py bucket it and core/serve.py trim snapshots to
+the *realized* depth rather than ``cfg.max_depth``.  Batch padding rides
+free: pad rows route from the root like any other and are sliced off.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.qo_update_leaves import round_up
+
+ATTR_LANES = 128
+LANE_FEATURE, LANE_THRESHOLD, LANE_LEFT, LANE_RIGHT = 0, 1, 2, 3
+
+__all__ = [
+    "ATTR_LANES", "LANE_FEATURE", "LANE_THRESHOLD", "LANE_LEFT",
+    "LANE_RIGHT", "fold_route_tables", "pack_route_attrs", "qo_route_pallas",
+]
+
+
+def fold_route_tables(feature, threshold, child, is_leaf):
+    """SoA node arrays -> folded self-looped transition tables.
+
+    feature/threshold/is_leaf: (T, M); child: (T, M, 2) with -1 at leaves.
+    Folds the tree axis into global node ids (``t*M + j``), rewrites
+    children to global ids and self-loops every leaf, so one transition
+    step is a no-op exactly at settled rows.  Returns
+    ``(feature, threshold, left, right)``, all (T*M,) — feature/left/right
+    int32, threshold f32.  Shared by every routing backend (the jnp sweep
+    gathers these as one packed row; :func:`pack_route_attrs` lays them
+    across MXU lanes), so the transition relation can never diverge
+    between paths.
+    """
+    T, M = feature.shape
+    N = T * M
+    gids = (jnp.arange(T, dtype=jnp.int32)[:, None] * M
+            + jnp.arange(M, dtype=jnp.int32)[None, :])            # (T, M)
+    gchild = jnp.where(
+        child >= 0,
+        child + (jnp.arange(T, dtype=jnp.int32) * M)[:, None, None], -1)
+    left = jnp.where(is_leaf, gids, gchild[..., 0]).reshape(N)
+    right = jnp.where(is_leaf, gids, gchild[..., 1]).reshape(N)
+    return (feature.reshape(N), threshold.reshape(N), left, right)
+
+
+def pack_route_attrs(feature, threshold, child, is_leaf, *,
+                     n_pad: int | None = None) -> jax.Array:
+    """SoA node arrays (T, M) -> the dense (Np, 128) routing plane.
+
+    Rows in [T*M, Np) self-loop, so any start node < Np routes safely.
+    All-f32: node ids stay exact well past 2^24 nodes' worth of any real
+    forest (one-hot contractions copy them bit-exactly).
+    """
+    featg, thr, left, right = fold_route_tables(feature, threshold, child,
+                                                is_leaf)
+    N = featg.shape[0]
+    Np = round_up(max(N if n_pad is None else n_pad, 8), 8)
+    selfloop = jnp.arange(Np, dtype=jnp.float32)                 # pad rows
+    attrs = jnp.zeros((Np, ATTR_LANES), jnp.float32)
+    attrs = attrs.at[:, LANE_FEATURE].set(
+        jnp.zeros((Np,)).at[:N].set(featg.astype(jnp.float32)))
+    attrs = attrs.at[:, LANE_THRESHOLD].set(
+        jnp.zeros((Np,)).at[:N].set(thr))
+    attrs = attrs.at[:, LANE_LEFT].set(
+        selfloop.at[:N].set(left.astype(jnp.float32)))
+    attrs = attrs.at[:, LANE_RIGHT].set(
+        selfloop.at[:N].set(right.astype(jnp.float32)))
+    return attrs
+
+
+def _qo_route_kernel(node_ref, x_ref, attrs_ref, out_ref, *, plies: int):
+    attrs = attrs_ref[...]                                       # (Np, 128)
+    x = x_ref[...]                                               # (tile_b, Fp)
+    node = node_ref[0, :].astype(jnp.float32)                    # (tile_b,)
+    tile_b, Fp = x.shape
+    Np = attrs.shape[0]
+
+    slot = jax.lax.broadcasted_iota(jnp.float32, (tile_b, Np), 1)
+    lane = jax.lax.broadcasted_iota(jnp.int32, (tile_b, ATTR_LANES), 1)
+    lane_f = jax.lax.broadcasted_iota(jnp.float32, (tile_b, Fp), 1)
+    dot = functools.partial(
+        jax.lax.dot_general, dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    for _ in range(plies):
+        oh = (node[:, None] == slot).astype(jnp.float32)
+        a = dot(oh, attrs)                                       # (tile_b, 128)
+        f = jnp.sum(jnp.where(lane == LANE_FEATURE, a, 0.0), axis=1)
+        thr = jnp.sum(jnp.where(lane == LANE_THRESHOLD, a, 0.0), axis=1)
+        left = jnp.sum(jnp.where(lane == LANE_LEFT, a, 0.0), axis=1)
+        right = jnp.sum(jnp.where(lane == LANE_RIGHT, a, 0.0), axis=1)
+        xv = jnp.sum(jnp.where(lane_f == f[:, None], x, 0.0), axis=1)
+        node = jnp.where(xv <= thr, left, right)
+
+    out_ref[0, :] = node.astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("plies", "tile_b", "interpret"))
+def qo_route_pallas(node0: jax.Array, x: jax.Array, attrs: jax.Array, *,
+                    plies: int, tile_b: int = 256,
+                    interpret: bool = False) -> jax.Array:
+    """node0: (T, Bp) i32 start nodes (global ids); x: (Bp, Fp) f32;
+    attrs: (Np, 128) from :func:`pack_route_attrs`.  Bp must be a multiple
+    of ``tile_b`` (ops.py pads; pad rows route from the root and are
+    sliced off there).  Returns (T, Bp) i32 global leaf ids after
+    ``plies`` transition steps.
+    """
+    T, Bp = node0.shape
+    Fp = x.shape[1]
+    assert x.shape[0] == Bp and Bp % tile_b == 0
+    assert attrs.shape[1] == ATTR_LANES
+    if plies == 0:
+        return node0
+    grid = (T, Bp // tile_b)
+    return pl.pallas_call(
+        functools.partial(_qo_route_kernel, plies=plies),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, tile_b), lambda t, i: (t, i)),       # row states
+            pl.BlockSpec((tile_b, Fp), lambda t, i: (i, 0)),      # shared X
+            pl.BlockSpec(attrs.shape, lambda t, i: (0, 0)),       # node plane
+        ],
+        out_specs=pl.BlockSpec((1, tile_b), lambda t, i: (t, i)),
+        out_shape=jax.ShapeDtypeStruct((T, Bp), jnp.int32),
+        interpret=interpret,
+    )(node0, x, attrs)

@@ -66,6 +66,30 @@ def forest_update_ref(ao_y, ao_sum_x, ao_radius, ao_origin, leaf, X, y, w=None):
     return new_y, new_sum_x
 
 
+def route_ref(feature, threshold, child, is_leaf, X, max_depth: int):
+    """Oracle for the batched routing kernel: the seed's vmap-of-scalar
+    ``fori_loop`` walk, preserved verbatim (per-row dependent gathers
+    through the SoA node arrays).  feature/threshold/is_leaf: (M,);
+    child: (M, 2); X: (B, F).  Returns (B,) i32 leaf ids."""
+    def one(x):
+        def body(_, node):
+            f = feature[node]
+            go_left = x[f] <= threshold[node]
+            nxt = jnp.where(go_left, child[node, 0], child[node, 1])
+            return jnp.where(is_leaf[node], node, nxt)
+        return jax.lax.fori_loop(0, max_depth + 1, body, jnp.int32(0))
+    return jax.vmap(one)(X)
+
+
+def forest_route_ref(feature, threshold, child, is_leaf, X, max_depth: int):
+    """Oracle for the fused forest route: :func:`route_ref` vmapped over
+    the tree axis — T separate scalar walks.  Arrays carry a leading (T,)
+    axis; returns (T, B) i32 per-tree (local) leaf ids."""
+    return jax.vmap(
+        lambda f, t, c, l: route_ref(f, t, c, l, X, max_depth))(
+        feature, threshold, child, is_leaf)
+
+
 def forest_query_ref(ao_y, ao_sum_x, attempt):
     """Oracle for the batched query: vmap(vmap(qo.best_split)) + masking."""
     M, F, C = ao_sum_x.shape

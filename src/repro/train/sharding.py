@@ -289,6 +289,57 @@ def build_sharded_forest(fcfg, mesh: Mesh, axis: str = "data"):
     return jax.jit(upd), jax.jit(prd)
 
 
+def build_sharded_serving(snap, mesh: Mesh, axis: str = "data"):
+    """jit'd ``predict_fn(snap, X) -> (B,)`` with X split over ``axis``.
+
+    The read-side complement of :func:`build_sharded_forest`: training
+    shards the TREE axis (every device owns T/D members and sees the
+    whole batch); serving shards the BATCH axis (every device owns B/D
+    request rows and sees the whole — replicated — snapshot, which the
+    §5.5 realized trim keeps small).  Each device runs the identical
+    fused routing sweep on its rows; there are NO collectives at all —
+    the per-row vote reduces over the local (replicated) tree axis.
+    B must divide the mesh axis.  ``snap``: a
+    :class:`repro.core.serve.Snapshot` (passed per call, so a refreshed
+    snapshot of the SAME model needs no recompile while shapes keep
+    their bucket; the ply budget is baked in at build, so a refreshed
+    snapshot that grew DEEPER than the build-time ply bucket is rejected
+    loudly — rebuild then — rather than silently under-routed).
+    """
+    from functools import partial
+
+    from jax.experimental.shard_map import shard_map
+
+    from repro.core import serve as sv
+
+    plies = sv.kops.depth_bucket(snap.depth)
+    body = partial(sv._predict_impl, plies=plies,
+                   backend=sv.kops.resolve_backend(None), single=snap.single)
+    arrays = (snap.feature, snap.threshold, snap.child, snap.is_leaf,
+              snap.leaf_mean, snap.vote_w)
+    # the snapshot ships as its six array leaves, NOT as the Snapshot
+    # pytree: its (depth, single) aux rides in the treedef, and baking it
+    # into in_specs would reject every refreshed snapshot whose realized
+    # depth merely CHANGED (shallower included) with a treedef mismatch
+    # instead of serving it
+    specs = tuple(P(*([None] * a.ndim)) for a in arrays)
+    # check_rep off: the routing sweep's gathers have no replication rule
+    fn = jax.jit(shard_map(
+        body, mesh=mesh, in_specs=specs + (P(axis, None),),
+        out_specs=P(axis), check_rep=False))
+
+    def predict_fn(s, X):
+        if s.single != snap.single or s.depth > plies:
+            raise ValueError(
+                f"snapshot (single={s.single}, depth={s.depth}) does not "
+                f"fit this serving build (single={snap.single}, ply "
+                f"budget {plies}): rebuild build_sharded_serving")
+        return fn(s.feature, s.threshold, s.child, s.is_leaf, s.leaf_mean,
+                  s.vote_w, X)
+
+    return predict_fn
+
+
 def to_shardings(mesh, spec_tree):
     return jax.tree.map(
         lambda s: NamedSharding(mesh, s), spec_tree,

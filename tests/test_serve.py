@@ -1,0 +1,346 @@
+"""The inference engine: batched routing + frozen serving snapshots.
+
+Routing equivalence is a bit-exactness contract (DESIGN.md §2.6): the
+fused level-synchronous sweep must return the scalar oracle's leaf id
+for every row on every backend, including the degenerate shapes that
+break naive traversal code — an untrained root, a root-only split, a
+single maximum-depth chain, batches that are not a power of two.  On
+top of that, serving snapshots must predict bit-identically to the live
+state they froze, and the cached-jit dispatch must never recompile for
+a fixed shape bucket.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import forest as fr
+from repro.core import hoeffding as ht
+from repro.core import serve as sv
+from repro.data import synth
+from repro.kernels import ops, ref
+
+BACKENDS = [
+    "interpret", "jnp",
+    pytest.param("pallas", marks=pytest.mark.skipif(
+        jax.default_backend() != "tpu",
+        reason="compiled Pallas kernels need a TPU")),
+]
+
+CFG = ht.HTRConfig(n_features=3, max_nodes=31, n_bins=32, grace_period=200,
+                   max_depth=6, r0=0.3)
+
+
+def _trained_tree(n=6000):
+    X, y = synth.piecewise_regression(n, n_features=3, seed=9)
+    return ht.update_stream(CFG, ht.init_state(CFG), jnp.array(X),
+                            jnp.array(y)), jnp.array(X[:512])
+
+
+def _chain_tree(cfg):
+    """Pathological single max-depth chain: every internal node's right
+    child is a leaf, the left child splits again on feature 0."""
+    s = ht.init_state(cfg)
+    feature = np.zeros(cfg.max_nodes, np.int32)
+    threshold = np.zeros(cfg.max_nodes, np.float32)
+    child = np.full((cfg.max_nodes, 2), -1, np.int32)
+    is_leaf = np.ones(cfg.max_nodes, bool)
+    depth = np.zeros(cfg.max_nodes, np.int32)
+    node, nxt = 0, 1
+    for d in range(cfg.max_depth):
+        threshold[node] = -0.5 * d
+        child[node] = [nxt, nxt + 1]
+        is_leaf[node] = False
+        depth[nxt] = depth[nxt + 1] = d + 1
+        node, nxt = nxt, nxt + 2
+    mean = np.arange(cfg.max_nodes, dtype=np.float32)  # distinct per node
+    return dict(
+        s, feature=jnp.array(feature), threshold=jnp.array(threshold),
+        child=jnp.array(child), is_leaf=jnp.array(is_leaf),
+        depth=jnp.array(depth), n_nodes=jnp.int32(2 * cfg.max_depth + 1),
+        ystats=dict(s["ystats"], mean=jnp.array(mean)))
+
+
+def _degenerate_states(cfg):
+    root = ht.init_state(cfg)                     # untrained root
+    split = ht.init_state(cfg)                    # one root split
+    split = dict(
+        split,
+        feature=split["feature"].at[0].set(1),
+        threshold=split["threshold"].at[0].set(0.25),
+        child=split["child"].at[0].set(jnp.array([1, 2])),
+        is_leaf=split["is_leaf"].at[0].set(False).at[1].set(True)
+        .at[2].set(True),
+        depth=split["depth"].at[1].set(1).at[2].set(1),
+        n_nodes=jnp.int32(3),
+        ystats=dict(split["ystats"],
+                    mean=split["ystats"]["mean"].at[1].set(-3.0)
+                    .at[2].set(7.0)))
+    return {"untrained_root": root, "root_only_split": split,
+            "max_depth_chain": _chain_tree(cfg)}
+
+
+# --------------------------------------------------------------------------
+# routing equivalence: fused sweep == scalar oracle, bit for bit
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("case", ["untrained_root", "root_only_split",
+                                  "max_depth_chain", "trained"])
+@pytest.mark.parametrize("B", [1, 100, 256])      # 100: not a power of two
+def test_route_matches_scalar_oracle(backend, case, B, rng):
+    if case == "trained":
+        s, _ = _trained_tree()
+    else:
+        s = _degenerate_states(CFG)[case]
+    X = jnp.array(rng.normal(0, 1.5, (B, CFG.n_features)).astype(np.float32))
+    want = ref.route_ref(s["feature"], s["threshold"], s["child"],
+                         s["is_leaf"], X, CFG.max_depth)
+    got = ops.route(s["feature"], s["threshold"], s["child"], s["is_leaf"],
+                    X, depth=CFG.max_depth, backend=backend)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # any ply count >= the realized depth is equivalent (self-loop no-ops)
+    realized = int(s["depth"].max())
+    got_trim = ops.route(s["feature"], s["threshold"], s["child"],
+                         s["is_leaf"], X, depth=realized, backend=backend)
+    np.testing.assert_array_equal(np.asarray(got_trim), np.asarray(want))
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_forest_route_matches_vmapped_oracle(backend, rng):
+    """The folded T-tree sweep == T independent scalar walks (diverse
+    member shapes: a chain, a root, a trained tree in one forest)."""
+    states = _degenerate_states(CFG)
+    trained, _ = _trained_tree()
+    members = [states["max_depth_chain"], states["untrained_root"], trained,
+               states["root_only_split"]]
+    trees = jax.tree.map(lambda *a: jnp.stack(a), *[
+        {k: m[k] for k in ("feature", "threshold", "child", "is_leaf")}
+        for m in members])
+    X = jnp.array(rng.normal(0, 1.5, (200, CFG.n_features)).astype(np.float32))
+    want = ref.forest_route_ref(trees["feature"], trees["threshold"],
+                                trees["child"], trees["is_leaf"], X,
+                                CFG.max_depth)
+    got = ops.forest_route(trees["feature"], trees["threshold"],
+                           trees["child"], trees["is_leaf"], X,
+                           depth=CFG.max_depth, backend=backend)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_route_traced_inline_matches_concrete_dispatch(rng):
+    """jit(route) (inlined sweep) == the concrete cached-jit dispatch."""
+    s, _ = _trained_tree()
+    X = jnp.array(rng.normal(0, 1.5, (300, 3)).astype(np.float32))
+    concrete = ops.route(s["feature"], s["threshold"], s["child"],
+                         s["is_leaf"], X, depth=CFG.max_depth, backend="jnp")
+    traced = jax.jit(functools.partial(ops.route, depth=CFG.max_depth,
+                                       backend="jnp"))(
+        s["feature"], s["threshold"], s["child"], s["is_leaf"], X)
+    np.testing.assert_array_equal(np.asarray(concrete), np.asarray(traced))
+
+
+@pytest.mark.parametrize("bad", [np.nan, np.inf, -np.inf])
+def test_non_finite_rows_follow_the_oracle(bad, rng):
+    """NaN/±inf features route exactly like the oracle's `x <= thr`
+    convention on both engines — serving garbage must not diverge.
+    (-inf is the nasty one: a settled row must keep self-looping at its
+    leaf even when its feature value compares True against everything.)"""
+    s, _ = _trained_tree()
+    X = jnp.array(rng.normal(0, 1.5, (64, 3)).astype(np.float32))
+    X = X.at[::3].set(bad)
+    X = X.at[1, :].set(bad)                       # a fully-poisoned row
+    want = ref.route_ref(s["feature"], s["threshold"], s["child"],
+                         s["is_leaf"], X, CFG.max_depth)
+    got = ops.route(s["feature"], s["threshold"], s["child"], s["is_leaf"],
+                    X, depth=CFG.max_depth, backend="jnp")
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_tree_update_rides_fused_route_bit_identically(monkeypatch):
+    """The rewired training hot path: stream trees learned with the
+    fused routing sweep == the same split engine routing through the
+    seed's scalar walk, bit for bit (routing feeds absorb, so a single
+    mis-routed row would diverge the learned state)."""
+    X, y = synth.piecewise_regression(4000, n_features=3, seed=5)
+    cfg = ht.HTRConfig(n_features=3, max_nodes=31, n_bins=32,
+                       grace_period=200, max_depth=6, r0=0.3)
+    s_fused = ht.update_stream(cfg, ht.init_state(cfg), jnp.array(X),
+                               jnp.array(y))
+
+    def scalar_route(feature, threshold, child, is_leaf, X, *, depth,
+                     backend=None, tile_b=256):
+        return ref.route_ref(feature, threshold, child, is_leaf, X, depth)
+
+    monkeypatch.setattr(ops, "route", scalar_route)
+    jax.clear_caches()      # force a retrace that sees the shim
+    try:
+        s_scalar = ht.update_stream(cfg, ht.init_state(cfg), jnp.array(X),
+                                    jnp.array(y))
+    finally:
+        monkeypatch.undo()
+        jax.clear_caches()  # drop programs traced over the shim
+    flat_f, _ = jax.tree_util.tree_flatten_with_path(s_fused)
+    flat_s, _ = jax.tree_util.tree_flatten_with_path(s_scalar)
+    for (path, a), (_, b) in zip(flat_f, flat_s):
+        np.testing.assert_array_equal(
+            np.asarray(a), np.asarray(b),
+            err_msg=f"state leaf {jax.tree_util.keystr(path)} diverged")
+
+
+# --------------------------------------------------------------------------
+# serving snapshots: freeze -> predict, bit-identical to the live state
+# --------------------------------------------------------------------------
+
+def _trained_forest(n=4096, T=4):
+    tcfg = ht.HTRConfig(n_features=3, max_nodes=31, n_bins=32,
+                        grace_period=200, max_depth=6, r0=0.3)
+    cfg = fr.ForestConfig(tree=tcfg, n_trees=T)
+    X, y = synth.piecewise_regression(n, n_features=3, seed=7)
+    s = fr.init_forest(cfg, jax.random.PRNGKey(2))
+    s, _ = fr.update_stream(cfg, s, jnp.array(X), jnp.array(y))
+    return cfg, s, jnp.array(X[:300])
+
+
+def test_tree_snapshot_predicts_bit_identically(rng):
+    s, Xt = _trained_tree()
+    snap = sv.freeze(s)
+    live = ht.predict(CFG, s, Xt)
+    np.testing.assert_array_equal(np.asarray(sv.predict_snapshot(snap, Xt)),
+                                  np.asarray(live))
+    # trimming: snapshot stores the realized tree, not cfg capacity
+    assert snap.single and snap.depth == int(s["depth"].max())
+    assert snap.feature.shape[1] <= CFG.max_nodes + 1
+    assert snap.depth <= CFG.max_depth
+
+
+def test_forest_snapshot_predicts_bit_identically():
+    cfg, s, Xt = _trained_forest()
+    snap = sv.freeze(s)
+    live = fr.predict(cfg, s, Xt)
+    np.testing.assert_array_equal(np.asarray(sv.predict_snapshot(snap, Xt)),
+                                  np.asarray(live))
+    assert not snap.single
+    np.testing.assert_array_equal(np.asarray(snap.vote_w),
+                                  np.asarray(s["vote_w"]))
+
+
+def test_snapshot_bfs_reindex_is_level_ordered():
+    """Breadth-first contract: node ids are contiguous front-loaded
+    levels — every child id > its parent id, depths are sorted."""
+    s, _ = _trained_tree()
+    snap = sv.freeze(s)
+    child = np.asarray(snap.child[0])
+    is_leaf = np.asarray(snap.is_leaf[0])
+    n = int((~is_leaf).sum()) * 2 + 1            # realized nodes
+    depth = np.full(child.shape[0], 0)
+    for u in range(n):
+        if not is_leaf[u]:
+            assert (child[u] > u).all()
+            depth[child[u]] = depth[u] + 1
+    assert (np.diff(depth[:n]) >= 0).all(), "BFS order must be level-sorted"
+
+
+def test_degenerate_snapshots(rng):
+    for name, s in _degenerate_states(CFG).items():
+        snap = sv.freeze(s)
+        X = jnp.array(rng.normal(0, 1.5, (50, 3)).astype(np.float32))
+        np.testing.assert_array_equal(
+            np.asarray(sv.predict_snapshot(snap, X)),
+            np.asarray(ht.predict(CFG, s, X)), err_msg=name)
+    assert sv.freeze(_degenerate_states(CFG)["untrained_root"]).depth == 0
+
+
+def test_vote_weights_carried_in_state():
+    """`vote_w` rides in ForestState (refreshed once per update) and the
+    read path consumes it — predict must not re-derive from the windows."""
+    cfg, s, Xt = _trained_forest()
+    np.testing.assert_array_equal(np.asarray(s["vote_w"]),
+                                  np.asarray(fr.vote_weights(cfg, s)))
+    tampered = dict(s, vote_w=jnp.zeros_like(s["vote_w"]).at[0].set(1.0))
+    p = np.asarray(fr.predict(cfg, tampered, Xt))
+    only0 = np.asarray(fr.member_predictions(cfg, tampered, Xt))[0]
+    np.testing.assert_allclose(p, only0, rtol=1e-6)
+
+
+# --------------------------------------------------------------------------
+# cached-jit dispatch: fixed shape bucket -> zero recompiles
+# --------------------------------------------------------------------------
+
+def test_predict_snapshot_same_bucket_does_not_recompile():
+    ops.clear_jit_caches()
+    cfg, s, _ = _trained_forest()
+    snap = sv.freeze(s)
+    rng = np.random.default_rng(1)
+    for B in (100, 128, 77, 128):                # one 128-row bucket
+        Xq = jnp.array(rng.normal(0, 1, (B, 3)).astype(np.float32))
+        sv.predict_snapshot(snap, Xq, backend="jnp")
+    handle = sv._jit_predict("jnp", ops.depth_bucket(snap.depth), False)
+    assert handle._cache_size() == 1, "same-bucket requests retraced"
+    # a second bucket compiles once more, the first stays warm
+    sv.predict_snapshot(
+        snap, jnp.array(rng.normal(0, 1, (200, 3)).astype(np.float32)),
+        backend="jnp")
+    assert handle._cache_size() == 2
+    ops.clear_jit_caches()
+    assert sv._jit_predict("jnp", ops.depth_bucket(snap.depth),
+                           False)._cache_size() == 0
+
+
+def test_route_same_bucket_does_not_recompile(rng):
+    ops.clear_jit_caches()
+    s, _ = _trained_tree()
+    realized = int(s["depth"].max())
+    for B in (100, 120, 128):
+        X = jnp.array(rng.normal(0, 1, (B, 3)).astype(np.float32))
+        ops.route(s["feature"], s["threshold"], s["child"], s["is_leaf"],
+                  X, depth=realized, backend="jnp")
+    handle = ops._jit_route_single("jnp", 256, ops.depth_bucket(realized))
+    assert handle._cache_size() == 1, "same-bucket route calls retraced"
+
+
+def test_live_forest_predict_dispatch_cached():
+    ops.clear_jit_caches()
+    cfg, s, _ = _trained_forest()
+    rng = np.random.default_rng(3)
+    for B in (64, 100, 128):
+        Xq = jnp.array(rng.normal(0, 1, (B, 3)).astype(np.float32))
+        fr.predict(cfg, s, Xq)
+    depth = min(cfg.tree.max_depth, int(s["trees"]["depth"].max()))
+    handle = fr._jit_predict_live(ops.resolve_backend(cfg.tree.split_backend),
+                                  ops.depth_bucket(depth))
+    assert handle._cache_size() == 1, "live predict retraced per request"
+
+
+# --------------------------------------------------------------------------
+# batch-axis-sharded serving == single-device serving
+# --------------------------------------------------------------------------
+
+def test_batch_sharded_serving_matches_single_device():
+    """shard_map over the request batch (1-device mesh here; the
+    multi-device path shares the body and is exercised by the subprocess
+    sharding tests' idiom) == plain snapshot predict."""
+    from jax.sharding import Mesh
+
+    from repro.train import sharding as sh
+
+    import dataclasses
+
+    cfg, s, Xt = _trained_forest()
+    snap = sv.freeze(s)
+    mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
+    pred = sh.build_sharded_serving(snap, mesh, "data")
+    np.testing.assert_array_equal(np.asarray(pred(snap, Xt)),
+                                  np.asarray(sv.predict_snapshot(snap, Xt)))
+    # a refreshed snapshot whose realized depth changed but still fits
+    # the build-time ply budget serves fine (the depth aux must not leak
+    # into the shard_map treedef) ...
+    shallower = dataclasses.replace(snap, depth=snap.depth - 1)
+    np.testing.assert_array_equal(np.asarray(pred(shallower, Xt)),
+                                  np.asarray(sv.predict_snapshot(snap, Xt)))
+    # ... while one DEEPER than the ply budget is rejected loudly, never
+    # silently under-routed
+    deeper = dataclasses.replace(snap, depth=ops.depth_bucket(snap.depth) + 1)
+    with pytest.raises(ValueError, match="rebuild"):
+        pred(deeper, Xt)

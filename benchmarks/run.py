@@ -17,8 +17,8 @@ from repro.models import layers as L
 
 L.set_compute_dtype(jnp.float32)  # CPU container cannot execute bf16 dots
 
-from benchmarks import (aos, forest, kernels, query_sweep, roofline,  # noqa: E402
-                        serve, tree)
+from benchmarks import (aos, dp, forest, kernels, query_sweep,  # noqa: E402
+                        roofline, serve, tree)
 from benchmarks.bench_io import write_bench as _write_bench  # noqa: E402
 
 
@@ -94,6 +94,14 @@ def main() -> None:
     serve_rows = serve.to_rows(srep)
     csv.extend(serve_rows)
     _write_bench("BENCH_serve.json", serve_rows)
+
+    # --- data-parallel stream scale-out (§4.1; own subprocess for the
+    # forced-host-device XLA flags) ----------------------------------------
+    drep = dp.run()
+    report["dp"] = drep
+    dp_rows = dp.to_rows(drep)
+    csv.extend(dp_rows)
+    _write_bench("BENCH_dp.json", dp_rows)
 
     # --- kernel micro-benches ---------------------------------------------
     krep = kernels.run()

@@ -126,6 +126,18 @@ class Checkpointer:
         return int(name.split("_")[1])
 
     def restore(self, step: int, template, verify: bool = True):
+        """CRC-checked restore into the structure of ``template``.
+
+        ``template`` is any pytree of arrays or ShapeDtypeStructs (from
+        ``jax.eval_shape``) with the saved tree's structure — including
+        registered-pytree dataclasses, whose static aux data (e.g. a
+        :class:`repro.core.serve.Snapshot`'s ``depth``/``single``) rides
+        in the treedef and is reproduced exactly.  Streaming-forest
+        states (:func:`repro.core.forest.init_forest`) and serving
+        snapshots round-trip bit-exactly: every leaf is a plain f32 /
+        int / bool array, so ``save`` → ``restore`` → ``predict`` is
+        pinned bitwise by tests/test_checkpoint.py.
+        """
         d = os.path.join(self.dir, f"step_{step:09d}")
         with open(os.path.join(d, "manifest.json")) as f:
             manifest = json.load(f)
@@ -137,6 +149,15 @@ class Checkpointer:
                 if want != got:
                     raise IOError(f"checkpoint corruption in leaf {k!r}")
         return _unflatten_into(template, flat)
+
+    def restore_latest(self, template, verify: bool = True):
+        """Restore the step the LATEST pointer names (the crash-recovery
+        entry point); raises ``FileNotFoundError`` when no checkpoint
+        has ever completed."""
+        step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint under {self.dir!r}")
+        return self.restore(step, template, verify=verify)
 
 
 def reshard(tree, sharding_tree):

@@ -294,58 +294,75 @@ def predict(cfg: ForestConfig, state: ForestState, X: jax.Array,
                          state["vote_w"], axis_name)
 
 
-def _fused_member_update(cfg: ForestConfig, trees, feat_mask, X, y, w):
-    """All T member updates as ONE flat pass over the PR-1 forest kernels.
+def _fold_tables(a, T, M):
+    """(T, M, ...) -> (T*M, ...): the tree axis folds into the table axis."""
+    return a.reshape((T * M,) + a.shape[2:])
 
-    A naive ``vmap(hoeffding.update)`` turns every segment-reduction and
-    scatter into a *batched* scatter, which XLA (CPU especially) lowers
-    poorly — measured ~4x slower than a python loop over trees.  Instead
-    the tree axis is folded into the table axis the kernels already
-    batch over: T trees x M nodes become one (T*M, F, C) forest with
-    global leaf ids ``t*M + leaf``, so absorb is ONE
-    :func:`repro.kernels.ops.forest_update`, the split query ONE
-    :func:`repro.kernels.ops.forest_best_splits` (both tree-count
-    agnostic on every backend), and only the cheap O(M) decision/scatter
-    stage (:func:`repro.core.hoeffding._apply_splits`) is vmapped.
 
-    trees: stacked TreeStates (T leading); w: (T, B) sample weights.
+def _fused_route_stats(cfg: ForestConfig, trees, X, y, w):
+    """Route all T members and reduce the batch's per-leaf target stats.
+
+    ONE fused route for all T trees (the §2.6 folded-node-axis sweep) and
+    one flat segment reduction over global leaf ids ``t*M + leaf``.
+    Returns ``(gl, leaf, batch_leaf)``: the (T*B,) folded leaf ids, the
+    unfolded (T, B) per-tree leaf ids, and the batch's (T, M) Stats —
+    the shard-local monitor quantities of the §4.1 data-parallel
+    protocol (which accumulates them in a delta instead of folding them
+    straight into ``trees``).
     """
     tcfg = cfg.tree
-    M, F = tcfg.max_nodes, tcfg.n_features
-    T = feat_mask.shape[0]
-    # ONE fused route for all T trees (the §2.6 folded-node-axis sweep)
+    M = tcfg.max_nodes
+    T = trees["feature"].shape[0]
     leaf = kops.forest_route(trees["feature"], trees["threshold"],
                              trees["child"], trees["is_leaf"], X,
                              depth=tcfg.max_depth,
                              backend=tcfg.split_backend)
-
-    # global leaf ids fold the tree axis into the table axis
     gl = (jnp.arange(T, dtype=leaf.dtype)[:, None] * M + leaf).reshape(-1)
-    y_rep = jnp.tile(y, T)
-    w_flat = w.reshape(-1)
-
-    # leaf target statistics: one flat segment reduction for all T trees
     batch_leaf = jax.tree.map(
         lambda a: a.reshape(T, M),
-        ht._segment_stats(y_rep, gl, T * M, w_flat))
-    trees = dict(trees,
-                 ystats=stats.merge(trees["ystats"], batch_leaf),
-                 seen_since_attempt=trees["seen_since_attempt"]
-                 + batch_leaf["n"])
+        ht._segment_stats(jnp.tile(y, T), gl, T * M, w.reshape(-1)))
+    return gl, leaf, batch_leaf
 
-    # absorb: one fused QO update for every (tree, leaf, feature) table
-    flat = lambda a: a.reshape((T * M,) + a.shape[2:])
+
+def _fused_absorb_tables(cfg: ForestConfig, ao_y, ao_sum_x, trees, gl,
+                         X, y, w):
+    """Absorb a routed batch into ANY (T, M, F, C) table set in one pass.
+
+    ``ao_y``/``ao_sum_x`` are the accumulation target (the live
+    ``trees["ao_*"]`` tables, or a shard-local DELTA starting from
+    zero — §4.1); the quantization grid (radius/origin) always comes
+    from ``trees``, so every shard bins identically, which is what makes
+    the deltas mergeable.  ``gl``: (T*B,) folded leaf ids from
+    :func:`_fused_route_stats`; w: (T, B).  Returns the merged tables.
+    """
+    tcfg = cfg.tree
+    M = tcfg.max_nodes
+    T = trees["feature"].shape[0]
+    flat = functools.partial(_fold_tables, T=T, M=M)
     ao_y, ao_sum_x = kops.forest_update(
-        jax.tree.map(flat, trees["ao_y"]), flat(trees["ao_sum_x"]),
+        jax.tree.map(flat, ao_y), flat(ao_sum_x),
         flat(trees["ao_radius"]), flat(trees["ao_origin"]),
-        gl, jnp.tile(X, (T, 1)), y_rep, w_flat,
+        gl, jnp.tile(X, (T, 1)), jnp.tile(y, T), w.reshape(-1),
         backend=tcfg.split_backend)
     unflat = lambda a: a.reshape((T, M) + a.shape[1:])
-    trees = dict(trees, ao_y=jax.tree.map(unflat, ao_y),
-                 ao_sum_x=unflat(ao_sum_x))
+    return jax.tree.map(unflat, ao_y), unflat(ao_sum_x)
 
-    # scheduling mask per member (shared definition with the single tree),
-    # plus the per-tree capacity gate                            # (T, M)
+
+def _fused_member_attempt(cfg: ForestConfig, trees, feat_mask):
+    """Attempt stage for all T members on their CURRENT statistics.
+
+    The scheduling mask is the shared single-tree definition
+    (:func:`repro.core.hoeffding.attempt_mask`) plus the per-tree
+    capacity gate; the ONE compacted query spans the whole ensemble's
+    folded T*M table axis, and only the cheap O(M) decision/scatter
+    stage is vmapped.  Statistics may come from the local batch (the
+    fused update below) or from a §4.1 cross-shard merge — the decision
+    math is identical either way.
+    """
+    tcfg = cfg.tree
+    M, F = tcfg.max_nodes, tcfg.n_features
+    T = feat_mask.shape[0]
+    flat = functools.partial(_fold_tables, T=T, M=M)
     attempt = jax.vmap(functools.partial(ht.attempt_mask, tcfg))(trees) \
         & (trees["n_nodes"][:, None] + 1 < M)
 
@@ -363,6 +380,37 @@ def _fused_member_update(cfg: ForestConfig, trees, feat_mask, X, y, w):
 
     return jax.lax.cond(attempt.any(), do, lambda tr, a: dict(tr),
                         trees, attempt)
+
+
+def _fused_member_update(cfg: ForestConfig, trees, feat_mask, X, y, w):
+    """All T member updates as ONE flat pass over the PR-1 forest kernels.
+
+    A naive ``vmap(hoeffding.update)`` turns every segment-reduction and
+    scatter into a *batched* scatter, which XLA (CPU especially) lowers
+    poorly — measured ~4x slower than a python loop over trees.  Instead
+    the tree axis is folded into the table axis the kernels already
+    batch over: T trees x M nodes become one (T*M, F, C) forest with
+    global leaf ids ``t*M + leaf``, so absorb is ONE
+    :func:`repro.kernels.ops.forest_update`, the split query ONE
+    :func:`repro.kernels.ops.forest_best_splits` (both tree-count
+    agnostic on every backend), and only the cheap O(M) decision/scatter
+    stage (:func:`repro.core.hoeffding._apply_splits`) is vmapped.
+    The three stages are factored (:func:`_fused_route_stats`,
+    :func:`_fused_absorb_tables`, :func:`_fused_member_attempt`) so the
+    §4.1 data-parallel trainer can run the first two per shard and the
+    attempt globally on merged statistics.
+
+    trees: stacked TreeStates (T leading); w: (T, B) sample weights.
+    """
+    gl, _, batch_leaf = _fused_route_stats(cfg, trees, X, y, w)
+    trees = dict(trees,
+                 ystats=stats.merge(trees["ystats"], batch_leaf),
+                 seen_since_attempt=trees["seen_since_attempt"]
+                 + batch_leaf["n"])
+    ao_y, ao_sum_x = _fused_absorb_tables(
+        cfg, trees["ao_y"], trees["ao_sum_x"], trees, gl, X, y, w)
+    trees = dict(trees, ao_y=ao_y, ao_sum_x=ao_sum_x)
+    return _fused_member_attempt(cfg, trees, feat_mask)
 
 
 def update(cfg: ForestConfig, state: ForestState, X: jax.Array,

@@ -52,9 +52,9 @@ from repro.kernels import ref as kref
 
 TreeState = Dict[str, jax.Array]
 
-__all__ = ["HTRConfig", "init_state", "update", "update_stream",
-           "pad_stream", "predict", "attempt_mask", "n_leaves",
-           "depth_histogram"]
+__all__ = ["HTRConfig", "init_state", "update", "update_local",
+           "attempt_splits", "update_stream", "pad_stream", "predict",
+           "attempt_mask", "n_leaves", "depth_histogram"]
 
 
 @dataclass(frozen=True)
@@ -433,6 +433,62 @@ def _do_attempts(cfg: HTRConfig, state: TreeState, attempt,
 # update = route -> absorb -> attempt
 # --------------------------------------------------------------------------
 
+def update_local(cfg: HTRConfig, state: TreeState, X: jax.Array,
+                 y: jax.Array, w: jax.Array | None = None) -> TreeState:
+    """The monitor half of :func:`update`: route + absorb, NO attempts.
+
+    Identical to the first two stages of :func:`update` (same op order,
+    bitwise): routes the batch, folds per-leaf target statistics and the
+    grace-period mass in, and absorbs every (leaf, feature) QO table.
+    The tree TOPOLOGY is untouched — this is the shard-local step of the
+    §4.1 data-parallel protocol, where split attempts are deferred to the
+    merged state at a sync boundary (:func:`attempt_splits`).
+    """
+    M = cfg.max_nodes
+    X = jnp.asarray(X, jnp.float32)
+    y = jnp.asarray(y, jnp.float32).reshape(-1)
+    w = jnp.ones_like(y) if w is None \
+        else jnp.asarray(w, jnp.float32).reshape(-1)
+
+    leaf = _route(state, X, cfg.max_depth, cfg.split_backend)   # (B,)
+
+    # --- leaf target statistics (predictor + split-variance source) ------
+    batch_leaf = _segment_stats(y, leaf, M, w)
+    state = dict(state,
+                 ystats=stats.merge(state["ystats"], batch_leaf),
+                 seen_since_attempt=state["seen_since_attempt"]
+                 + batch_leaf["n"])
+
+    # --- absorb: one fused QO update for every (leaf, feature) table -----
+    return _absorb(cfg, state, leaf, X, y, w)
+
+
+def attempt_splits(cfg: HTRConfig, state: TreeState,
+                   feat_mask: jax.Array | None = None) -> TreeState:
+    """The attempt half of :func:`update`: evaluate + apply due splits.
+
+    Runs the §2.5 scheduling mask over the CURRENT statistics (however
+    they were accumulated — a local batch, or a §4.1 cross-shard merge),
+    gates on capacity, and executes the compacted query + Hoeffding
+    decision under ``lax.cond`` so a batch with no mature leaf pays
+    nothing.  ``update == attempt_splits(update_local(...))`` bitwise.
+    """
+    M = cfg.max_nodes
+    attempt = attempt_mask(cfg, state)
+    if cfg.split_backend == "oracle":
+        do = _do_attempts_oracle
+    else:
+        # capacity gate, part of the batched attempt mask: a full tree can
+        # never split, so skipping the query is free and the learned tree
+        # is bit-identical
+        attempt = attempt & (state["n_nodes"] + 1 < M)
+        do = _do_attempts
+
+    return jax.lax.cond(
+        attempt.any(), functools.partial(do, cfg, feat_mask=feat_mask),
+        lambda s, a: dict(s), state, attempt)
+
+
 def update(cfg: HTRConfig, state: TreeState, X: jax.Array, y: jax.Array,
            w: jax.Array | None = None,
            feat_mask: jax.Array | None = None) -> TreeState:
@@ -452,40 +508,12 @@ def update(cfg: HTRConfig, state: TreeState, X: jax.Array, y: jax.Array,
         it are still observed (their QO tables fill) but can never be
         chosen as a split feature.
 
-    Returns the new TreeState (same shapes; purely functional).
+    Returns the new TreeState (same shapes; purely functional).  The two
+    stages are public on their own — :func:`update_local` (route/absorb)
+    and :func:`attempt_splits` — so the §4.1 data-parallel trainer can
+    absorb locally per shard and attempt globally on merged statistics.
     """
-    M = cfg.max_nodes
-    X = jnp.asarray(X, jnp.float32)
-    y = jnp.asarray(y, jnp.float32).reshape(-1)
-    w = jnp.ones_like(y) if w is None \
-        else jnp.asarray(w, jnp.float32).reshape(-1)
-
-    leaf = _route(state, X, cfg.max_depth, cfg.split_backend)   # (B,)
-
-    # --- leaf target statistics (predictor + split-variance source) ------
-    batch_leaf = _segment_stats(y, leaf, M, w)
-    state = dict(state,
-                 ystats=stats.merge(state["ystats"], batch_leaf),
-                 seen_since_attempt=state["seen_since_attempt"]
-                 + batch_leaf["n"])
-
-    # --- absorb: one fused QO update for every (leaf, feature) table -----
-    state = _absorb(cfg, state, leaf, X, y, w)
-
-    # --- attempt ----------------------------------------------------------
-    attempt = attempt_mask(cfg, state)
-    if cfg.split_backend == "oracle":
-        do = _do_attempts_oracle
-    else:
-        # capacity gate, part of the batched attempt mask: a full tree can
-        # never split, so skipping the query is free and the learned tree
-        # is bit-identical
-        attempt = attempt & (state["n_nodes"] + 1 < M)
-        do = _do_attempts
-
-    return jax.lax.cond(
-        attempt.any(), functools.partial(do, cfg, feat_mask=feat_mask),
-        lambda s, a: dict(s), state, attempt)
+    return attempt_splits(cfg, update_local(cfg, state, X, y, w), feat_mask)
 
 
 def pad_stream(X, y, w=None, batch_size: int = 256):

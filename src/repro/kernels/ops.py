@@ -44,10 +44,12 @@ from repro.kernels.qo_update_leaves import (
 from repro.kernels.qo_query_batched import qo_query_batched_pallas
 from repro.kernels.qo_route import (
     fold_route_tables, pack_route_attrs, qo_route_pallas)
+from repro.kernels.qo_merge import (
+    pack_merge_planes, unpack_merge_planes, qo_merge_pallas)
 
 __all__ = [
     "qo_update", "qo_best_split", "default_interpret", "resolve_backend",
-    "forest_bin_ids", "forest_update", "forest_best_splits",
+    "forest_bin_ids", "forest_update", "forest_best_splits", "forest_merge",
     "route", "forest_route", "depth_bucket",
     "query_buckets", "clear_jit_caches", "QUERY_MIN_BUCKET",
 ]
@@ -243,6 +245,55 @@ def forest_update(ao_y, ao_sum_x, ao_radius, ao_origin, leaf, X, y, w=None, *,
     leaf, X, y, w = _pad_batch(leaf, X, y, w, _pow2_bucket(X.shape[0], 128))
     return _jit_forest_update(backend, tile_b, tile_m)(
         ao_y, ao_sum_x, ao_radius, ao_origin, leaf, X, y, w)
+
+
+def _forest_merge_impl(a_y, a_sum_x, b_y, b_sum_x, *, backend: str,
+                       tile_r: int):
+    """Backend dispatch body of :func:`forest_merge` (inputs normalized)."""
+    if backend == "jnp":
+        return stats.merge(a_y, b_y), a_sum_x + b_sum_x
+    shape = a_sum_x.shape
+    tile_r = min(tile_r, round_up(shape[0] * shape[1], 8))
+    dense = qo_merge_pallas(
+        pack_merge_planes(a_y, a_sum_x, tile_r=tile_r),
+        pack_merge_planes(b_y, b_sum_x, tile_r=tile_r),
+        tile_r=tile_r, interpret=(backend == "interpret"))
+    return unpack_merge_planes(dense, shape)
+
+
+@functools.lru_cache(maxsize=None)
+def _jit_forest_merge(backend: str, tile_r: int):
+    """Cached jit of the table merge, keyed on backend + tiling; the inner
+    jit cache is keyed on shapes (fixed for a given forest)."""
+    return jax.jit(functools.partial(_forest_merge_impl, backend=backend,
+                                     tile_r=tile_r))
+
+
+def forest_merge(a_y, a_sum_x, b_y, b_sum_x, *, backend: str | None = None,
+                 tile_r: int = 256):
+    """Chan-merge two same-shape QO table sets (DESIGN.md §4.1).
+
+    a_y/b_y: Stats dicts of (N, F, C); a_sum_x/b_sum_x: (N, F, C) — N is
+    any table-axis length (a tree's M, a forest's folded T·M, or a
+    gathered shard stack reshaped in).  Returns the merged
+    ``(ao_y, ao_sum_x)``: per-bin (n, mean, M2) through the Chan operator
+    (Eqs. 4-5, empty-operand safe) and ``sum_x`` summed.  Associative +
+    commutative — the write-side collective that lets D shard-local
+    deltas reduce to exactly the single-stream tables; radius/origin do
+    not ride through this op (shards must share the base quantization
+    grid for the merge to be meaningful — the §4.1 trainer replicates
+    them).
+
+    Called with concrete arrays this dispatches through a cached jit
+    (table shapes are fixed for a given forest, so the cache holds one
+    program per backend); under an enclosing trace it inlines, so a
+    jitted sync step fuses the whole reduction.
+    """
+    backend = resolve_backend(backend)
+    if _is_traced(a_y, a_sum_x, b_y, b_sum_x):
+        return _forest_merge_impl(a_y, a_sum_x, b_y, b_sum_x,
+                                  backend=backend, tile_r=tile_r)
+    return _jit_forest_merge(backend, tile_r)(a_y, a_sum_x, b_y, b_sum_x)
 
 
 def _forest_query_jnp(ao_y, ao_sum_x, attempt):
@@ -538,6 +589,7 @@ def register_jit_cache(fn):
 
 
 register_jit_cache(_jit_forest_update)
+register_jit_cache(_jit_forest_merge)
 register_jit_cache(_jit_forest_query)
 register_jit_cache(_jit_route)
 register_jit_cache(_jit_route_single)

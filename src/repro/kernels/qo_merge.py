@@ -1,0 +1,91 @@
+"""Pallas TPU kernel: Chan-merge two QO table sets plane by plane.
+
+The write-side collective of DESIGN.md §4.1: a stream sharded over D
+devices learns D independent (n, mean, M2, sum_x) table sets against the
+SAME quantization grid, and the sync boundary folds them together with
+the paper's merge (Eqs. 4-5).  The merge is purely elementwise over the
+(table, bin) plane — no contractions, no scans — so the kernel is a
+single VPU pass:
+
+    grid = (row-tiles,)
+    block = (4, tile_r, Cp)        rows: n / mean / M2 / sum_x
+
+with the (N, F, C) table axis flattened to R = N·F rows of Cp = C
+rounded-to-128 lanes (``pack_merge_planes`` — a reshape + pad, no
+transpose, unlike the §2.3 forest layout).  Per element:
+
+    n    = n_a + n_b
+    mean = (n_a·mean_a + n_b·mean_b) / n        (0 where n == 0)
+    M2   = M2_a + M2_b + delta²·n_a·n_b / n     (delta = mean_b − mean_a)
+    sum_x= sum_x_a + sum_x_b
+
+exactly :func:`repro.core.stats.merge` — associative, commutative, and
+empty-operand safe, which is what lets D shard deltas reduce in any
+pairing (the sync uses a fixed log-depth order so reruns are
+deterministic).  Pad rows/lanes are all-zero on both sides and merge to
+zero, so no mask is needed.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.qo_update_leaves import round_up
+
+__all__ = ["pack_merge_planes", "unpack_merge_planes", "qo_merge_pallas"]
+
+
+def pack_merge_planes(ao_y, ao_sum_x, *, tile_r: int = 256) -> jax.Array:
+    """(N, F, C) dict-of-arrays tables -> dense (4, Rp, Cp) merge planes.
+
+    Row-major flatten of the (N, F) table axes (R = N·F) padded up to the
+    row tile; lanes are bins padded to 128.  Cheap by construction: one
+    reshape and one pad per plane, no transposes.
+    """
+    N, F, C = ao_sum_x.shape
+    R, Cp = N * F, round_up(C, 128)
+    Rp = round_up(R, tile_r)
+    planes = jnp.stack([ao_y["n"], ao_y["mean"], ao_y["m2"], ao_sum_x])
+    return jnp.zeros((4, Rp, Cp), jnp.float32).at[:, :R, :C].set(
+        planes.reshape(4, R, C))
+
+
+def unpack_merge_planes(dense: jax.Array, shape):
+    """Dense (4, Rp, Cp) -> (ao_y dict, ao_sum_x) of ``shape`` = (N, F, C)."""
+    N, F, C = shape
+    planes = dense[:, :N * F, :C].reshape(4, N, F, C)
+    return ({"n": planes[0], "mean": planes[1], "m2": planes[2]}, planes[3])
+
+
+def _qo_merge_kernel(a_ref, b_ref, o_ref):
+    n_a, mean_a, m2_a, sx_a = (a_ref[i] for i in range(4))
+    n_b, mean_b, m2_b, sx_b = (b_ref[i] for i in range(4))
+    n = n_a + n_b
+    safe = jnp.where(n > 0, n, 1.0)
+    delta = mean_b - mean_a
+    o_ref[0] = n
+    o_ref[1] = jnp.where(n > 0, (n_a * mean_a + n_b * mean_b) / safe, 0.0)
+    o_ref[2] = jnp.where(
+        n > 0, m2_a + m2_b + delta * delta * (n_a * n_b) / safe, 0.0)
+    o_ref[3] = sx_a + sx_b
+
+
+@functools.partial(jax.jit, static_argnames=("tile_r", "interpret"))
+def qo_merge_pallas(a: jax.Array, b: jax.Array, *, tile_r: int = 256,
+                    interpret: bool = False) -> jax.Array:
+    """Merge two packed (4, Rp, Cp) table-plane stacks (Rp % tile_r == 0)."""
+    rows, Rp, Cp = a.shape
+    assert rows == 4 and a.shape == b.shape, (a.shape, b.shape)
+    assert Rp % tile_r == 0, (Rp, tile_r)
+    return pl.pallas_call(
+        _qo_merge_kernel,
+        grid=(Rp // tile_r,),
+        in_specs=[pl.BlockSpec((4, tile_r, Cp), lambda i: (0, i, 0)),
+                  pl.BlockSpec((4, tile_r, Cp), lambda i: (0, i, 0))],
+        out_specs=pl.BlockSpec((4, tile_r, Cp), lambda i: (0, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((4, Rp, Cp), jnp.float32),
+        interpret=interpret,
+    )(a, b)

@@ -66,6 +66,28 @@ def forest_update_ref(ao_y, ao_sum_x, ao_radius, ao_origin, leaf, X, y, w=None):
     return new_y, new_sum_x
 
 
+def forest_merge_ref(a_y, a_sum_x, b_y, b_sum_x):
+    """Oracle for the cross-shard table merge: per-table qo.merge_tables.
+
+    Loops the (N, F) table grid in Python and merges each pair through
+    :func:`repro.core.qo.merge_tables` (the paper's Eqs. 4-5 path the
+    system tests validate against numpy) — slow, unambiguous.
+    """
+    N, F, _ = a_sum_x.shape
+
+    def one(n, f):
+        pick = lambda ao_y, ao_sx: {
+            "radius": jnp.float32(1.0), "origin": jnp.float32(0.0),
+            "sum_x": ao_sx[n, f], "y": jax.tree.map(lambda a: a[n, f], ao_y)}
+        return qo_lib.merge_tables(pick(a_y, a_sum_x), pick(b_y, b_sum_x))
+
+    tables = [[one(n, f) for f in range(F)] for n in range(N)]
+    stackf = lambda getter: jnp.stack(
+        [jnp.stack([getter(tables[n][f]) for f in range(F)]) for n in range(N)])
+    new_y = {k: stackf(lambda t, k=k: t["y"][k]) for k in ("n", "mean", "m2")}
+    return new_y, stackf(lambda t: t["sum_x"])
+
+
 def route_ref(feature, threshold, child, is_leaf, X, max_depth: int):
     """Oracle for the batched routing kernel: the seed's vmap-of-scalar
     ``fori_loop`` walk, preserved verbatim (per-row dependent gathers

@@ -17,7 +17,8 @@ Logical mapping:
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Tuple
+import functools
+from typing import Any, Dict, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -344,3 +345,493 @@ def to_shardings(mesh, spec_tree):
     return jax.tree.map(
         lambda s: NamedSharding(mesh, s), spec_tree,
         is_leaf=lambda x: isinstance(x, P))
+
+
+# --------------------------------------------------------------------------
+# Batch-axis (data-parallel) stream scale-out: cross-shard QO merge training
+# (DESIGN.md §4.1) — the write-side complement of build_sharded_serving
+# --------------------------------------------------------------------------
+
+def _dp_init_delta(fcfg, n_shards: int):
+    """Zeroed shard-local accumulator pytree, every leaf (D, ...)-leading.
+
+    ``ystats``: per-(tree, leaf) target Stats absorbed since the last
+    sync (its ``n`` is also the grace mass); ``ao_y``/``ao_sum_x``: the
+    QO bin deltas; ``err``: per-member prequential squared-error Stats.
+    All start at the merge identity (n = 0), so a sync after zero local
+    steps is a no-op.
+    """
+    from repro.core import stats
+
+    t = fcfg.tree
+    D, T, M, F, C = n_shards, fcfg.n_trees, t.max_nodes, t.n_features, t.n_bins
+    return {
+        "ystats": stats.init((D, T, M)),
+        "ao_y": stats.init((D, T, M, F, C)),
+        "ao_sum_x": jnp.zeros((D, T, M, F, C), jnp.float32),
+        "err": stats.init((D, T)),
+    }
+
+
+def init_data_parallel(fcfg, key, n_shards: int):
+    """Fresh data-parallel trainer state (host-layout; placement is the
+    builders' job).
+
+    ``forest``: a replicated :func:`repro.core.forest.init_forest` state
+    — the shared tree topology, quantization grids and merged
+    statistics every shard routes against;
+    ``delta``: the shard-local accumulators (:func:`_dp_init_delta`);
+    ``keys``: (D, T, 2) u32 per-(shard, member) bagging PRNG keys —
+    Poisson draws stay independent across shards AND members;
+    ``step``: python int batch counter driving the sync cadence.
+    """
+    from repro.core import forest as fr
+
+    kf, kd = jax.random.split(key)
+    return {
+        "forest": fr.init_forest(fcfg, kf),
+        "delta": _dp_init_delta(fcfg, n_shards),
+        "keys": jax.random.split(kd, n_shards * fcfg.n_trees).reshape(
+            n_shards, fcfg.n_trees, 2),
+        "step": 0,
+    }
+
+
+def _dp_local_shard(fcfg, forest, delta, keys, X, y):
+    """ONE shard's local step: route/absorb into the delta, NO attempts.
+
+    The monitor half of the §4.1 protocol, per device: draw Poisson
+    bagging weights from the shard's member keys, route the local rows
+    through the REPLICATED trees, accumulate prequential member errors
+    (test-then-train) and the batch's leaf/bin statistics into the
+    shard-local delta.  The forest itself — topology, quantization
+    grids, merged stats — is read-only here, which is what keeps the
+    shards' deltas mergeable (identical bins) and the attempt stage a
+    sync-boundary-only, globally-identical decision.
+
+    delta/keys: this shard's slices (no leading D axis).
+    Returns ``(delta', keys')``.
+    """
+    from repro.core import forest as fr
+    from repro.core import stats
+
+    trees = forest["trees"]
+    B = y.shape[0]
+    split = jax.vmap(functools.partial(jax.random.split, num=2))(keys)
+    keys2, wkeys = split[:, 0], split[:, 1]
+    cdf = jnp.asarray(fr._poisson_cdf(fcfg.lam), jnp.float32)
+    w = jax.vmap(lambda k: fr._poisson_weights(k, cdf, (B,)))(wkeys)  # (T, B)
+
+    gl, leaf, batch_leaf = fr._fused_route_stats(fcfg, trees, X, y, w)
+    # prequential member errors on the raw local rows, pre-absorb
+    yhat = jnp.take_along_axis(trees["ystats"]["mean"], leaf, axis=1)
+    err = stats.from_batch((yhat - y[None, :]) ** 2, axis=1)      # (T,)
+
+    ao_y, ao_sum_x = fr._fused_absorb_tables(
+        fcfg, delta["ao_y"], delta["ao_sum_x"], trees, gl, X, y, w)
+    return {
+        "ystats": stats.merge(delta["ystats"], batch_leaf),
+        "ao_y": ao_y,
+        "ao_sum_x": ao_sum_x,
+        "err": stats.merge(delta["err"], err),
+    }, keys2
+
+
+def _dp_local_window(fcfg, forest, delta, keys, Xw, yw):
+    """Scan a whole sync window of local steps in ONE dispatch.
+
+    Xw: (S, B_local, F); yw: (S, B_local) — S consecutive local batches
+    folded into the shard delta with no host round-trip in between (the
+    deployment shape of §4.1: between sync boundaries a shard is fully
+    autonomous).  Same per-step body as :func:`_dp_local_shard`, so the
+    scanned window is bit-identical to S single-step calls.
+    """
+    def body(carry, xy):
+        d, k = _dp_local_shard(fcfg, forest, carry[0], carry[1],
+                               xy[0], xy[1])
+        return (d, k), None
+
+    (delta, keys), _ = jax.lax.scan(body, (delta, keys), (Xw, yw))
+    return delta, keys
+
+
+def _dp_reduce_deltas(fcfg, delta):
+    """(D, ...) stacked shard deltas -> ONE merged delta (log-depth).
+
+    The same pairwise-halving schedule as
+    :func:`repro.core.stats.tree_reduce_merge` — the order a real
+    all-reduce combines partials in, and FIXED, so the reduction is
+    deterministic and the sharded trainer can be pinned bitwise against
+    its single-device reference.  The QO planes go through
+    :func:`repro.kernels.ops.forest_merge` (the kernel-backed §4.1
+    collective) with the (live, T·M) table axis folded; the small
+    per-leaf/per-member Stats go through the same Chan operator.
+    """
+    from repro.core import stats
+    from repro.kernels import ops as kops
+
+    backend = fcfg.tree.split_backend
+    F, C = fcfg.tree.n_features, fcfg.tree.n_bins
+
+    def merge_pair(a, b):
+        h = a["ao_sum_x"].shape[0] * a["ao_sum_x"].shape[1]
+        fold = lambda x: x.reshape((h * fcfg.tree.max_nodes, F, C))
+        ao_y, ao_sum_x = kops.forest_merge(
+            jax.tree.map(fold, a["ao_y"]), fold(a["ao_sum_x"]),
+            jax.tree.map(fold, b["ao_y"]), fold(b["ao_sum_x"]),
+            backend=backend)
+        unfold = lambda x: x.reshape(a["ao_sum_x"].shape)
+        return {
+            "ystats": stats.merge(a["ystats"], b["ystats"]),
+            "ao_y": jax.tree.map(unfold, ao_y),
+            "ao_sum_x": unfold(ao_sum_x),
+            "err": stats.merge(a["err"], b["err"]),
+        }
+
+    while delta["ao_sum_x"].shape[0] > 1:
+        k = delta["ao_sum_x"].shape[0]
+        half = k // 2
+        a = jax.tree.map(lambda x: x[:half], delta)
+        b = jax.tree.map(lambda x: x[half:2 * half], delta)
+        m = merge_pair(a, b)
+        if k % 2:
+            delta = jax.tree.map(
+                lambda x, t: jnp.concatenate([x, t[-1:]], 0), m, delta)
+        else:
+            delta = m
+    return jax.tree.map(lambda x: x[0], delta)
+
+
+def _dp_apply_sync(fcfg, forest, merged):
+    """Fold ONE merged delta into the replicated forest + attempt splits.
+
+    The global half of the §4.1 protocol, identical on every device:
+    leaf predictors and grace mass advance by the merged batch
+    statistics, the QO tables fold through
+    :func:`repro.kernels.ops.forest_merge`, and the §2.5 attempt stage
+    runs on the MERGED tables — so every shard derives the same splits
+    and the topology stays replicated without ever shipping it.  The
+    prequential error windows merge into ``err_win`` and refresh
+    ``vote_w`` (in DP the short EWMA window degenerates to the merged
+    running mean: per-shard EWMAs are not order-mergeable, and the DP
+    trainer has no drift-swap — membership is frozen between syncs).
+    Returns ``(forest', aux)``.
+    """
+    from repro.core import forest as fr
+    from repro.core import stats
+    from repro.kernels import ops as kops
+
+    T, M = fcfg.n_trees, fcfg.tree.max_nodes
+    F, C = fcfg.tree.n_features, fcfg.tree.n_bins
+    trees = forest["trees"]
+    trees = dict(trees,
+                 ystats=stats.merge(trees["ystats"], merged["ystats"]),
+                 seen_since_attempt=trees["seen_since_attempt"]
+                 + merged["ystats"]["n"])
+    fold = lambda x: x.reshape((T * M, F, C))
+    ao_y, ao_sum_x = kops.forest_merge(
+        jax.tree.map(fold, trees["ao_y"]), fold(trees["ao_sum_x"]),
+        jax.tree.map(fold, merged["ao_y"]), fold(merged["ao_sum_x"]),
+        backend=fcfg.tree.split_backend)
+    unfold = lambda x: x.reshape((T, M) + x.shape[1:])
+    trees = dict(trees, ao_y=jax.tree.map(unfold, ao_y),
+                 ao_sum_x=unfold(ao_sum_x))
+    trees = fr._fused_member_attempt(fcfg, trees, forest["feat_mask"])
+
+    err_win = stats.merge(forest["err_win"], merged["err"])
+    state = dict(forest, trees=trees, err_win=err_win,
+                 err_ewma=jnp.where(err_win["n"] > 0, err_win["mean"], 0.0))
+    state["vote_w"] = fr.vote_weights(fcfg, state)
+    aux = {"mass": merged["ystats"]["n"].sum(),
+           "member_mse": state["err_ewma"],
+           "n_nodes": trees["n_nodes"]}
+    return state, aux
+
+
+@functools.lru_cache(maxsize=None)
+def _dp_sync_jit(fcfg):
+    """ONE cached jit of reduce + apply per config — shared by the
+    sharded trainer and the single-device reference, so the sync math of
+    the two paths is literally the same compiled program (the §4.1
+    bit-identity pin)."""
+    return jax.jit(lambda forest, delta: _dp_apply_sync(
+        fcfg, forest, _dp_reduce_deltas(fcfg, delta)))
+
+
+@functools.lru_cache(maxsize=None)
+def _dp_apply_jit(fcfg):
+    """Cached jit of the apply half alone (the int8-compressed sync path
+    hands it an already-psum-merged delta)."""
+    return jax.jit(functools.partial(_dp_apply_sync, fcfg))
+
+
+def _register_dp_caches():
+    """Hook the DP sync jits into the shared ``ops.clear_jit_caches``
+    registry, so the one-call-resets-everything contract keeps holding
+    (function-scoped import to match the module's import discipline —
+    no cycle: the kernel stack never imports train.sharding)."""
+    from repro.kernels import ops as kops
+
+    kops.register_jit_cache(_dp_sync_jit)
+    kops.register_jit_cache(_dp_apply_jit)
+
+
+_register_dp_caches()
+
+
+def _stats_linear(s):
+    """Stats -> psum-able linear encoding (n, n·mean, M2 + n·mean²)."""
+    s1 = s["n"] * s["mean"]
+    return {"n": s["n"], "s1": s1, "s2": s["m2"] + s1 * s["mean"]}
+
+
+def _stats_delinear(p):
+    """Inverse of :func:`_stats_linear` after the sum — the
+    cancellation-prone form the robust paths avoid (§3); acceptable here
+    because it is the explicitly lossy cheap-shipping mode."""
+    n = p["n"]
+    mean = jnp.where(n > 0, p["s1"] / jnp.where(n > 0, n, 1.0), 0.0)
+    m2 = jnp.maximum(p["s2"] - p["s1"] * mean, 0.0)
+    return {"n": n, "mean": mean, "m2": jnp.where(n > 0, m2, 0.0)}
+
+
+def _dp_gather_int8(fcfg, delta, axis: str):
+    """Shard-local delta -> merged delta via int8-quantized psum (§4.2).
+
+    The cheap-shipping path: every shipped plane is linear (Stats ride
+    the (n, n·mean, M2-corrected) encoding), int8-quantized per leaf
+    with one f32 scale (4x wire traffic cut,
+    :func:`repro.optim.compress.quantized_psum`), summed across the
+    mesh axis, and decoded back.  Lossy by design — quantization error
+    ~ max|plane|/127 per element — so it trades the §4.1 bit-exactness
+    for bandwidth; use it when the sync payload, not the math, is the
+    bottleneck.
+    """
+    from repro.optim import compress
+
+    linear = {
+        "ystats": _stats_linear(delta["ystats"]),
+        "ao_y": _stats_linear(delta["ao_y"]),
+        "ao_sum_x": delta["ao_sum_x"],
+        "err": _stats_linear(delta["err"]),
+    }
+    summed = compress.quantized_psum(linear, axis)
+    return {
+        "ystats": _stats_delinear(summed["ystats"]),
+        "ao_y": _stats_delinear(summed["ao_y"]),
+        "ao_sum_x": summed["ao_sum_x"],
+        "err": _stats_delinear(summed["err"]),
+    }
+
+
+class DataParallelForest(NamedTuple):
+    """The §4.1 trainer's entry points (both builders return one):
+
+    ``init(key) -> dpstate``; ``update(dpstate, X, y) -> (dpstate,
+    aux | None)`` — one global batch, sync when the ``sync_every``
+    cadence fires; ``update_window(dpstate, Xw, yw) -> (dpstate, aux)``
+    — a whole (S, B, F) window of local batches in ONE dispatch followed
+    by an unconditional sync (the deployment shape: shards run
+    autonomously between boundaries); ``predict(dpstate, X) -> (B,)``.
+    """
+    init: Any
+    update: Any
+    update_window: Any
+    predict: Any
+
+
+def build_data_parallel_forest(fcfg, mesh: Mesh, axis: str = "data",
+                               sync_every: int = 1,
+                               compress: str | None = None):
+    """Data-parallel stream scale-out (DESIGN.md §4.1).
+
+    The third and last sharding axis: :func:`build_sharded_forest`
+    spreads the TREE axis (PR 2), :func:`build_sharded_serving` the
+    request batch (PR 4) — this one shards the TRAINING STREAM itself
+    over ``D = mesh.shape[axis]`` devices.  Every device owns a
+    replicated copy of the forest (topology + quantization grids +
+    merged stats) and a private delta; a local step is route/absorb
+    only, and every ``sync_every`` batches the deltas all-reduce with
+    the Chan-merge collective (:func:`repro.kernels.ops.forest_merge`)
+    and the split attempts execute on the merged statistics — identical
+    on every device, so the D-shard forest is bit-identical to the
+    single-device execution of the same protocol at every sync boundary
+    (pinned by tests against :func:`build_data_parallel_reference`).
+
+    ``sync_every`` trades collective traffic for split latency: between
+    syncs no leaf can split (statistics keep absorbing; nothing is
+    lost — the QO algebra is order-free), so the effective grace period
+    is at least ``sync_every`` global batches.  ``compress="int8"``
+    ships the deltas int8-quantized over a psum instead of exactly
+    (§4.2; lossy, ~4x less wire traffic).  Requires a kernel-capable
+    ``split_backend`` (not ``"oracle"``).
+
+    Returns a :class:`DataParallelForest` named tuple:
+
+    * ``init(key) -> dpstate`` — device-placed trainer state;
+    * ``update(dpstate, X, y) -> (dpstate, aux | None)`` — learn one
+      global batch of B rows (D must divide B; rows shard
+      contiguously).  ``aux`` is None between syncs and
+      ``{"mass", "member_mse", "n_nodes"}`` at a boundary;
+    * ``update_window(dpstate, Xw, yw) -> (dpstate, aux)`` — a whole
+      (S, B, F) window of local batches in ONE dispatch, then an
+      unconditional sync;
+    * ``predict(dpstate, X) -> (B,)`` — request-sharded vote over the
+      replicated forest (no collectives; D must divide B).
+    """
+    from jax.experimental.shard_map import shard_map
+
+    from repro.core import forest as fr
+
+    assert fcfg.tree.split_backend != "oracle", \
+        "data-parallel training needs a fused backend (oracle is per-row)"
+    assert compress in (None, "int8"), compress
+    D = mesh.shape[axis]
+
+    abstract = jax.eval_shape(
+        lambda: init_data_parallel(fcfg, jax.random.PRNGKey(0), D))
+    repl = lambda t: jax.tree.map(lambda a: P(*([None] * a.ndim)), t)
+    shardy = lambda t: jax.tree.map(
+        lambda a: P(axis, *([None] * (a.ndim - 1))), t)
+    fspec = repl(abstract["forest"])
+    dspec = shardy(abstract["delta"])
+    kspec = P(axis, None, None)
+    forest_repl = to_shardings(mesh, fspec)
+    delta_shard = to_shardings(mesh, dspec)
+    delta_repl = to_shardings(mesh, repl(abstract["delta"]))
+
+    def local_body(forest, delta, keys, X, y):
+        d, k = jax.tree.map(lambda a: a[0], (delta, keys))
+        d, k = _dp_local_shard(fcfg, forest, d, k, X, y)
+        return jax.tree.map(lambda a: a[None], (d, k))
+
+    # check_rep off: routing/absorb gathers have no replication rule
+    local = jax.jit(shard_map(
+        local_body, mesh=mesh,
+        in_specs=(fspec, dspec, kspec, P(axis, None), P(axis)),
+        out_specs=(dspec, kspec), check_rep=False))
+
+    def window_body(forest, delta, keys, Xw, yw):
+        d, k = jax.tree.map(lambda a: a[0], (delta, keys))
+        d, k = _dp_local_window(fcfg, forest, d, k, Xw, yw)
+        return jax.tree.map(lambda a: a[None], (d, k))
+
+    window = jax.jit(shard_map(
+        window_body, mesh=mesh,
+        in_specs=(fspec, dspec, kspec, P(None, axis, None), P(None, axis)),
+        out_specs=(dspec, kspec), check_rep=False))
+
+    if compress == "int8":
+        gather = jax.jit(shard_map(
+            lambda delta: _dp_gather_int8(
+                fcfg, jax.tree.map(lambda a: a[0], delta), axis),
+            mesh=mesh, in_specs=(dspec,),
+            out_specs=repl(jax.eval_shape(
+                lambda d: jax.tree.map(lambda a: a[0], d),
+                abstract["delta"])), check_rep=False))
+        sync = lambda forest, delta: _dp_apply_jit(fcfg)(
+            forest, gather(delta))
+    else:
+        # the all-gather is the collective; reduce + apply then run
+        # replicated through the SAME jit as the reference
+        sync = lambda forest, delta: _dp_sync_jit(fcfg)(
+            forest, jax.device_put(delta, delta_repl))
+
+    zero_delta = jax.device_put(_dp_init_delta(fcfg, D), delta_shard)
+
+    def init_fn(key):
+        st = init_data_parallel(fcfg, key, D)
+        return {
+            "forest": jax.device_put(st["forest"], forest_repl),
+            "delta": jax.device_put(st["delta"], delta_shard),
+            "keys": jax.device_put(st["keys"],
+                                   NamedSharding(mesh, kspec)),
+            "step": 0,
+        }
+
+    def _synced(dpstate, delta, keys, step):
+        forest, aux = sync(dpstate["forest"], delta)
+        return {"forest": jax.device_put(forest, forest_repl),
+                "delta": zero_delta, "keys": keys, "step": step}, aux
+
+    def update_fn(dpstate, X, y):
+        delta, keys = local(dpstate["forest"], dpstate["delta"],
+                            dpstate["keys"], X, y)
+        step = dpstate["step"] + 1
+        if step % sync_every:
+            return dict(dpstate, delta=delta, keys=keys, step=step), None
+        return _synced(dpstate, delta, keys, step)
+
+    def update_window_fn(dpstate, Xw, yw):
+        delta, keys = window(dpstate["forest"], dpstate["delta"],
+                             dpstate["keys"], Xw, yw)
+        return _synced(dpstate, delta, keys,
+                       dpstate["step"] + Xw.shape[0])
+
+    prd = jax.jit(shard_map(
+        lambda forest, X: fr.predict(fcfg, forest, X),
+        mesh=mesh, in_specs=(fspec, P(axis, None)), out_specs=P(axis),
+        check_rep=False))
+
+    return DataParallelForest(init_fn, update_fn, update_window_fn,
+                              lambda dpstate, X: prd(dpstate["forest"], X))
+
+
+def build_data_parallel_reference(fcfg, n_shards: int, sync_every: int = 1):
+    """Single-device oracle of :func:`build_data_parallel_forest`.
+
+    The SAME protocol with the shard axis as a local ``vmap`` instead of
+    a mesh axis — every local step runs the identical per-shard body on
+    the identical slices, and the sync boundary goes through the very
+    same cached jit (:func:`_dp_sync_jit`).  The sharded trainer is
+    pinned bitwise against this at every sync boundary
+    (tests/test_dp.py): the mesh placement is an execution choice, not
+    a semantics change.
+    """
+    from repro.core import forest as fr
+
+    assert fcfg.tree.split_backend != "oracle"
+
+    local = jax.jit(jax.vmap(
+        functools.partial(_dp_local_shard, fcfg),
+        in_axes=(None, 0, 0, 0, 0)))
+    window = jax.jit(jax.vmap(
+        functools.partial(_dp_local_window, fcfg),
+        in_axes=(None, 0, 0, 1, 1)))
+
+    def init_fn(key):
+        return init_data_parallel(fcfg, key, n_shards)
+
+    def _shardwise(X, y):
+        B = y.shape[-1] if y.ndim > 1 else y.shape[0]
+        assert B % n_shards == 0, (B, n_shards)
+        shp = X.shape[:-2] + (n_shards, B // n_shards)
+        return X.reshape(shp + X.shape[-1:]), y.reshape(shp)
+
+    def _synced(dpstate, delta, keys, step):
+        forest, aux = _dp_sync_jit(fcfg)(dpstate["forest"], delta)
+        return {"forest": forest,
+                "delta": _dp_init_delta(fcfg, n_shards),
+                "keys": keys, "step": step}, aux
+
+    def update_fn(dpstate, X, y):
+        Xs, ys = _shardwise(X, y)
+        delta, keys = local(dpstate["forest"], dpstate["delta"],
+                            dpstate["keys"], Xs, ys)
+        step = dpstate["step"] + 1
+        if step % sync_every:
+            return dict(dpstate, delta=delta, keys=keys, step=step), None
+        return _synced(dpstate, delta, keys, step)
+
+    def update_window_fn(dpstate, Xw, yw):
+        Xs, ys = _shardwise(Xw, yw)                  # (S, D, B/D, ...)
+        delta, keys = window(dpstate["forest"], dpstate["delta"],
+                             dpstate["keys"], Xs, ys)
+        return _synced(dpstate, delta, keys,
+                       dpstate["step"] + Xw.shape[0])
+
+    def predict_fn(dpstate, X):
+        return fr.predict(fcfg, dpstate["forest"], X)
+
+    return DataParallelForest(init_fn, update_fn, update_window_fn,
+                              predict_fn)

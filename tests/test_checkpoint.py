@@ -60,6 +60,60 @@ def test_corruption_detected(tmp_path):
         ck.restore(1, jax.eval_shape(lambda: tree))
 
 
+def _small_forest():
+    from repro.core import forest as fr, hoeffding as ht
+    from repro.data import synth
+
+    tree = ht.HTRConfig(n_features=4, max_nodes=31, n_bins=32,
+                        grace_period=50, max_depth=6, r0=0.25)
+    cfg = fr.ForestConfig(tree=tree, n_trees=4)
+    X, y = synth.piecewise_regression(768, n_features=4, seed=11)
+    state = fr.init_forest(cfg, jax.random.PRNGKey(2))
+    state, _ = fr.update_stream(cfg, state, jnp.asarray(X), jnp.asarray(y))
+    return cfg, state, jnp.asarray(X[:256])
+
+
+def test_forest_state_roundtrip_predict_bitwise(tmp_path):
+    """ForestState is a plain pytree: save -> restore_latest -> predict
+    is bit-exact (the model-refresh/crash-recovery contract)."""
+    from repro.core import forest as fr
+
+    cfg, state, X = _small_forest()
+    assert int(np.asarray(state["trees"]["n_nodes"]).max()) > 1  # trained
+    ck = Checkpointer(str(tmp_path))
+    ck.save(3, state, blocking=True)
+    rest = ck.restore_latest(jax.eval_shape(lambda: state))
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        np.asarray(a), np.asarray(b)), state, rest)
+    np.testing.assert_array_equal(np.asarray(fr.predict(cfg, state, X)),
+                                  np.asarray(fr.predict(cfg, rest, X)))
+
+
+def test_snapshot_roundtrip_predict_bitwise(tmp_path):
+    """serve.Snapshot (a registered-pytree dataclass) round-trips through
+    the checkpointer with its static aux data (depth, single) intact and
+    serves bit-identical predictions."""
+    from repro.core import serve
+
+    cfg, state, X = _small_forest()
+    snap = serve.freeze(state)
+    ck = Checkpointer(str(tmp_path))
+    ck.save(7, snap, blocking=True)
+    rest = ck.restore_latest(jax.eval_shape(lambda: snap))
+    assert (rest.depth, rest.single) == (snap.depth, snap.single)
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        np.asarray(a), np.asarray(b)), snap, rest)
+    np.testing.assert_array_equal(
+        np.asarray(serve.predict_snapshot(snap, X)),
+        np.asarray(serve.predict_snapshot(rest, X)))
+
+
+def test_restore_latest_empty_dir(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    with pytest.raises(FileNotFoundError):
+        ck.restore_latest(jax.eval_shape(lambda: {"w": jnp.zeros(2)}))
+
+
 def test_reshard_onto_new_sharding(tmp_path):
     """Elastic restart: restore written under one mesh, place onto another."""
     from jax.sharding import NamedSharding, PartitionSpec as P

@@ -1,0 +1,193 @@
+"""Data-parallel stream scale-out (DESIGN.md §4.1) correctness pins.
+
+The headline contract: a forest trained with the batch axis sharded over
+D devices (``build_data_parallel_forest``) is BIT-IDENTICAL at every
+sync boundary to the single-device execution of the same protocol
+(``build_data_parallel_reference``) — topology, QO tables, predictor
+stats, vote weights, everything — on every backend.  Multi-device runs
+use the forced-host-device subprocess idiom of test_sharding.py.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def run_with_devices(code: str, n=4) -> str:
+    env = dict(os.environ,
+               XLA_FLAGS=f"--xla_force_host_platform_device_count={n}",
+               PYTHONPATH=SRC)
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env, timeout=600)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+@pytest.mark.parametrize("backend", ["jnp", "interpret"])
+def test_data_parallel_matches_reference_bitwise(backend):
+    """4-shard shard_map training == the single-device reference of the
+    same protocol, bitwise, at EVERY sync boundary (trees grow)."""
+    code = f"""
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.core import forest as fr, hoeffding as ht
+    from repro.data import synth
+    from repro.train import sharding as sh
+    from repro.launch.mesh import make_mesh_auto
+
+    tree = ht.HTRConfig(n_features=4, max_nodes=31, n_bins=32,
+                        grace_period=100, max_depth=6, r0=0.25,
+                        split_backend="{backend}")
+    cfg = fr.ForestConfig(tree=tree, n_trees=4)
+    X, y = synth.piecewise_regression(2048, n_features=4, seed=7)
+    X, y = jnp.asarray(X), jnp.asarray(y)
+    mesh = make_mesh_auto((4,), ("data",))
+    i_s, u_s, w_s, p_s = sh.build_data_parallel_forest(cfg, mesh, "data",
+                                                       sync_every=2)
+    i_r, u_r, w_r, p_r = sh.build_data_parallel_reference(cfg, 4,
+                                                          sync_every=2)
+    st_s, st_r = i_s(jax.random.PRNGKey(5)), i_r(jax.random.PRNGKey(5))
+    n_syncs = 0
+    for i in range(0, 2048, 256):
+        st_s, aux_s = u_s(st_s, X[i:i+256], y[i:i+256])
+        st_r, aux_r = u_r(st_r, X[i:i+256], y[i:i+256])
+        assert (aux_s is None) == (aux_r is None)
+        if aux_s is not None:
+            n_syncs += 1
+            jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+                np.asarray(a), np.asarray(b)), st_s["forest"], st_r["forest"])
+            jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+                np.asarray(a), np.asarray(b)), aux_s, aux_r)
+    assert n_syncs == 4
+    assert int(np.asarray(st_s["forest"]["trees"]["n_nodes"]).max()) > 1
+    np.testing.assert_array_equal(np.asarray(p_s(st_s, X[:512])),
+                                  np.asarray(p_r(st_r, X[:512])))
+
+    # the one-dispatch window path == S per-batch steps + sync, bitwise
+    # (sharded window vs BOTH its own per-step path and the reference's
+    # window)
+    st_w, st_p = i_s(jax.random.PRNGKey(9)), i_s(jax.random.PRNGKey(9))
+    st_wr = i_r(jax.random.PRNGKey(9))
+    for i in range(0, 1024, 512):
+        Xw = X[i:i+512].reshape(2, 256, -1)
+        yw = y[i:i+512].reshape(2, 256)
+        st_w, aux_w = w_s(st_w, Xw, yw)
+        st_wr, aux_wr = w_r(st_wr, Xw, yw)
+        for j in (0, 256):
+            st_p, aux_p = u_s(st_p, X[i+j:i+j+256], y[i+j:i+j+256])
+        for other in (st_p["forest"], st_wr["forest"]):
+            jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+                np.asarray(a), np.asarray(b)), st_w["forest"], other)
+    print("DP_BITWISE_OK")
+    """
+    assert "DP_BITWISE_OK" in run_with_devices(code)
+
+
+def test_data_parallel_sync_cadence_single_device():
+    """The sync_every knob on a 1-device mesh: aux only at boundaries,
+    the delta resets to the merge identity after a sync and carries
+    exactly the absorbed mass between syncs, and grace counters advance
+    only at sync time."""
+    from repro.core import forest as fr, hoeffding as ht
+    from repro.data import synth
+    from repro.train import sharding as sh
+    from repro.launch.mesh import make_mesh_auto
+
+    tree = ht.HTRConfig(n_features=4, max_nodes=31, n_bins=32,
+                        grace_period=100, max_depth=6, r0=0.25)
+    cfg = fr.ForestConfig(tree=tree, n_trees=4)
+    X, y = synth.piecewise_regression(768, n_features=4, seed=3)
+    X, y = jnp.asarray(X), jnp.asarray(y)
+    mesh = make_mesh_auto((1,), ("data",))
+    init, upd, _, _ = sh.build_data_parallel_forest(cfg, mesh, "data",
+                                                    sync_every=3)
+    st = init(jax.random.PRNGKey(0))
+    seen0 = np.asarray(st["forest"]["trees"]["seen_since_attempt"]).copy()
+
+    st, aux = upd(st, X[:256], y[:256])
+    assert aux is None
+    # between syncs: the forest (incl. grace counters) is untouched
+    np.testing.assert_array_equal(
+        np.asarray(st["forest"]["trees"]["seen_since_attempt"]), seen0)
+    mass1 = float(np.asarray(st["delta"]["ystats"]["n"]).sum())
+    assert mass1 > 0  # Poisson(6) mass of 256 rows x 4 trees
+
+    st, aux = upd(st, X[256:512], y[256:512])
+    assert aux is None
+    st, aux = upd(st, X[512:768], y[512:768])
+    assert aux is not None and st["step"] == 3
+    # the merged mass the sync reports is everything absorbed since init
+    assert float(aux["mass"]) > mass1
+    # delta reset to the merge identity
+    assert float(np.asarray(st["delta"]["ystats"]["n"]).sum()) == 0.0
+    assert float(np.asarray(st["delta"]["ao_y"]["n"]).sum()) == 0.0
+    # the merged mass landed in the replicated predictors in one lump
+    # (>= because split children inherit copies of the halves), and
+    # crossing grace at the boundary let the roots attempt (which
+    # resets their seen_since_attempt — hence nodes, not counters)
+    assert float(np.asarray(st["forest"]["trees"]["ystats"]["n"]).sum()) \
+        >= float(aux["mass"]) - 1e-3
+    assert int(np.asarray(st["forest"]["trees"]["n_nodes"]).max()) > 1
+
+
+def test_data_parallel_int8_compress():
+    """The §4.2 cheap-shipping path: int8-quantized delta psum trains a
+    close-but-not-bitwise forest (mass within 5% of exact) and serves
+    finite predictions."""
+    code = """
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.core import forest as fr, hoeffding as ht
+    from repro.data import synth
+    from repro.train import sharding as sh
+    from repro.launch.mesh import make_mesh_auto
+
+    tree = ht.HTRConfig(n_features=4, max_nodes=31, n_bins=32,
+                        grace_period=100, max_depth=6, r0=0.25)
+    cfg = fr.ForestConfig(tree=tree, n_trees=4)
+    X, y = synth.piecewise_regression(1024, n_features=4, seed=7)
+    X, y = jnp.asarray(X), jnp.asarray(y)
+    mesh = make_mesh_auto((4,), ("data",))
+    i8, u8, _, p8 = sh.build_data_parallel_forest(cfg, mesh, "data",
+                                                   sync_every=2,
+                                                   compress="int8")
+    ir, ur, _, pr = sh.build_data_parallel_reference(cfg, 4, sync_every=2)
+    s8, sr = i8(jax.random.PRNGKey(5)), ir(jax.random.PRNGKey(5))
+    for i in range(0, 1024, 256):
+        s8, _ = u8(s8, X[i:i+256], y[i:i+256])
+        sr, _ = ur(sr, X[i:i+256], y[i:i+256])
+    n8 = float(np.asarray(s8["forest"]["trees"]["ystats"]["n"]).sum())
+    nr = float(np.asarray(sr["forest"]["trees"]["ystats"]["n"]).sum())
+    assert abs(n8 - nr) / nr < 0.05, (n8, nr)
+    assert int(np.asarray(s8["forest"]["trees"]["n_nodes"]).max()) > 1
+    p = np.asarray(p8(s8, X[:256]))
+    assert np.isfinite(p).all()
+    print("DP_INT8_OK")
+    """
+    assert "DP_INT8_OK" in run_with_devices(code)
+
+
+def test_update_equals_local_plus_attempt():
+    """The §4.1 staging refactor of the single tree: ``update`` is
+    exactly ``attempt_splits(update_local(...))`` (bitwise), so the DP
+    protocol's local/global split introduces no third semantics."""
+    from repro.core import hoeffding as ht
+    from repro.data import synth
+
+    cfg = ht.HTRConfig(n_features=4, max_nodes=31, n_bins=32,
+                       grace_period=50, max_depth=6, r0=0.25)
+    X, y = synth.piecewise_regression(512, n_features=4, seed=1)
+    X, y = jnp.asarray(X), jnp.asarray(y)
+    s1 = s2 = ht.init_state(cfg)
+    for i in range(0, 512, 128):
+        xb, yb = X[i:i + 128], y[i:i + 128]
+        s1 = ht.update(cfg, s1, xb, yb)
+        s2 = ht.attempt_splits(cfg, ht.update_local(cfg, s2, xb, yb))
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        np.asarray(a), np.asarray(b)), s1, s2)
+    assert int(np.asarray(s1["n_nodes"])) > 1

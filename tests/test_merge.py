@@ -1,0 +1,214 @@
+"""Cross-shard QO merge algebra: the §4.1 collective's contracts.
+
+Three layers of guarantee, matching DESIGN.md §4.1:
+
+* the kernel-backed :func:`repro.kernels.ops.forest_merge` agrees with
+  the per-table :func:`repro.core.qo.merge_tables` oracle on every
+  backend;
+* the merge operator is commutative BITWISE (float add/mul commute) and
+  associative up to float rounding (hypothesis property) — the legal
+  all-reduce operator claim;
+* ``test_merge_tables_is_distributed_update`` (promised by DESIGN §4.1
+  since PR 1): a stream sharded D ways, learned as D independent tables
+  and merge-reduced, equals the single-stream table — BITWISE on
+  exact-arithmetic streams (integer-valued x with one target value per
+  bin, where every float op in both paths is exact, so any summation
+  order must produce identical bits), and to float tolerance on generic
+  gaussian streams.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import qo, stats
+from repro.kernels import ops, ref
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover
+    HAVE_HYPOTHESIS = False
+needs_hypothesis = pytest.mark.skipif(not HAVE_HYPOTHESIS,
+                                      reason="hypothesis not installed")
+
+BACKENDS = [
+    "interpret", "jnp",
+    pytest.param("pallas", marks=pytest.mark.skipif(
+        jax.default_backend() != "tpu",
+        reason="compiled Pallas kernels need a TPU")),
+]
+
+N, F, C = 11, 3, 40
+
+
+def _rand_tables(rng, n=N):
+    cnt = jnp.asarray(rng.integers(0, 5, size=(n, F, C)).astype(np.float32))
+    mean = jnp.asarray(rng.normal(size=(n, F, C)).astype(np.float32)) * (cnt > 0)
+    m2 = jnp.abs(jnp.asarray(
+        rng.normal(size=(n, F, C)).astype(np.float32))) * (cnt > 1)
+    sx = jnp.asarray(rng.normal(size=(n, F, C)).astype(np.float32)) * (cnt > 0)
+    return {"n": cnt, "mean": mean, "m2": m2}, sx
+
+
+def _assert_tables(got, want, **tol):
+    gy, gsx = got
+    wy, wsx = want
+    for k in ("n", "mean", "m2"):
+        np.testing.assert_allclose(np.asarray(gy[k]), np.asarray(wy[k]),
+                                   err_msg=k, **tol)
+    np.testing.assert_allclose(np.asarray(gsx), np.asarray(wsx), **tol)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_forest_merge_matches_oracle(rng, backend):
+    a = _rand_tables(rng)
+    b = _rand_tables(rng)
+    want = ref.forest_merge_ref(*a, *b)
+    got = ops.forest_merge(*a, *b, backend=backend)
+    _assert_tables(got, want, rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_forest_merge_empty_is_identity(rng, backend):
+    """Merging an all-empty delta leaves occupied-bin stats unchanged to
+    float tolerance and counts/sum_x exactly (n + 0, sx + 0 are exact)."""
+    a = _rand_tables(rng)
+    z = (stats.init((N, F, C)), jnp.zeros((N, F, C)))
+    gy, gsx = ops.forest_merge(*a, *z, backend=backend)
+    np.testing.assert_array_equal(np.asarray(gy["n"]), np.asarray(a[0]["n"]))
+    np.testing.assert_array_equal(np.asarray(gsx), np.asarray(a[1]))
+    _assert_tables((gy, gsx), a, rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_forest_merge_commutative(rng, backend):
+    """a ⊕ b == b ⊕ a: BITWISE for the pure sums (n, sum_x — float add
+    commutes), and to 1-ulp for mean/M2 (XLA may contract the symmetric
+    ``n_a·m_a + n_b·m_b`` into an FMA whose operand order differs)."""
+    a = _rand_tables(rng)
+    b = _rand_tables(rng)
+    (ab_y, ab_sx) = ops.forest_merge(*a, *b, backend=backend)
+    (ba_y, ba_sx) = ops.forest_merge(*b, *a, backend=backend)
+    np.testing.assert_array_equal(np.asarray(ab_y["n"]),
+                                  np.asarray(ba_y["n"]))
+    np.testing.assert_array_equal(np.asarray(ab_sx), np.asarray(ba_sx))
+    for k in ("mean", "m2"):
+        np.testing.assert_allclose(np.asarray(ab_y[k]), np.asarray(ba_y[k]),
+                                   rtol=1e-6, atol=1e-7, err_msg=k)
+
+
+def test_forest_merge_traced_inlines(rng):
+    """Under an enclosing jit the op inlines (same values), and concrete
+    calls reuse ONE cached program per backend."""
+    a = _rand_tables(rng)
+    b = _rand_tables(rng)
+    eager = ops.forest_merge(*a, *b, backend="jnp")
+    traced = jax.jit(functools.partial(ops.forest_merge, backend="jnp"))(
+        *a, *b)
+    _assert_tables(traced, eager, rtol=1e-6, atol=1e-6)
+    before = ops._jit_forest_merge.cache_info().currsize
+    ops.forest_merge(*a, *b, backend="jnp")
+    assert ops._jit_forest_merge.cache_info().currsize == before
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=30, deadline=None)
+    @given(st.integers(0, 2 ** 31 - 1))
+    def test_merge_associative_commutative(seed):
+        """(a ⊕ b) ⊕ c ≈ a ⊕ (b ⊕ c) and a ⊕ b == b ⊕ a over random
+        tables — the algebra that legalizes any all-reduce pairing."""
+        rng = np.random.default_rng(seed)
+        a, b, c = (_rand_tables(rng, n=3) for _ in range(3))
+        m = lambda u, v: ops.forest_merge(*u, *v, backend="jnp")
+        left = m(m(a, b), c)
+        right = m(a, m(b, c))
+        _assert_tables(left, right, rtol=1e-4, atol=1e-5)
+        _assert_tables(m(a, b), m(b, a), rtol=1e-6, atol=1e-7)
+
+
+# --------------------------------------------------------------------------
+# the promised §4.1 property: shard + merge == single stream
+# --------------------------------------------------------------------------
+
+def _exact_stream(rng, n_rows):
+    """Integer stream on which every float op of both paths is exact:
+    x ∈ {-8..8} (radius-1 bins, no edge clipping at C = 32) and y an
+    integer function of the bin, so every bin mean is exactly its y
+    value, every tile/merged M2 is exactly 0, and all sums are integer.
+    """
+    x = rng.integers(-8, 9, size=n_rows).astype(np.float32)
+    y = (np.abs(x) * 3 - 7).astype(np.float32)
+    return jnp.asarray(x), jnp.asarray(y)
+
+
+@pytest.mark.parametrize("d", [2, 3, 8])
+def test_merge_tables_is_distributed_update(rng, d):
+    """D shard-learned QO tables merge-reduce to EXACTLY the
+    single-stream table (bitwise on an exact-arithmetic stream, in both
+    log-depth and sequential reduction order)."""
+    x, y = _exact_stream(rng, 24 * d)
+    full = qo.update(qo.init(32, radius=1.0), x, y)
+    shards = [qo.update(qo.init(32, radius=1.0), xs, ys)
+              for xs, ys in zip(jnp.split(x, d), jnp.split(y, d))]
+
+    seq = shards[0]
+    for s in shards[1:]:
+        seq = qo.merge_tables(seq, s)
+    while len(shards) > 1:  # log-depth pairing, the all-reduce order
+        pairs = [qo.merge_tables(shards[i], shards[i + 1])
+                 for i in range(0, len(shards) - 1, 2)]
+        shards = pairs + ([shards[-1]] if len(shards) % 2 else [])
+    for merged in (seq, shards[0]):
+        jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+            np.asarray(a), np.asarray(b)), merged, full)
+
+
+def test_merge_tables_distributed_update_float(rng):
+    """Same property on a generic gaussian stream: equal to float
+    tolerance (summation order is the only difference)."""
+    x = jnp.asarray(rng.normal(size=512).astype(np.float32))
+    y = jnp.asarray(rng.normal(size=512).astype(np.float32))
+    full = qo.update(qo.init(64, radius=0.2), x, y)
+    merged = functools.reduce(
+        qo.merge_tables,
+        [qo.update(qo.init(64, radius=0.2), xs, ys)
+         for xs, ys in zip(jnp.split(x, 4), jnp.split(y, 4))])
+    for k in ("n", "mean", "m2"):
+        np.testing.assert_allclose(np.asarray(merged["y"][k]),
+                                   np.asarray(full["y"][k]),
+                                   rtol=2e-5, atol=2e-5, err_msg=k)
+    np.testing.assert_allclose(np.asarray(merged["sum_x"]),
+                               np.asarray(full["sum_x"]), rtol=2e-5,
+                               atol=2e-5)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_forest_merge_is_distributed_forest_update(rng, backend):
+    """The same bitwise claim one level up: D shard-local
+    ``forest_update`` deltas reduced with ``forest_merge`` equal the
+    single-batch ``forest_update`` on every backend (exact stream; the
+    feature column is shared so one target value rides per bin of every
+    table)."""
+    M_, F_, C_ = 5, 2, 32
+    d, rows = 4, 96
+    x, y = _exact_stream(rng, rows)
+    X = jnp.stack([x, x], 1)                                  # (B, 2)
+    leaf = jnp.asarray(rng.integers(0, M_, size=rows).astype(np.int32))
+    radius = jnp.ones((M_, F_), jnp.float32)
+    origin = jnp.zeros((M_, F_), jnp.float32)
+    zero = lambda: (stats.init((M_, F_, C_)), jnp.zeros((M_, F_, C_)))
+
+    upd = functools.partial(ops.forest_update, ao_radius=radius,
+                            ao_origin=origin, backend=backend)
+    full = upd(*zero(), leaf=leaf, X=X, y=y)
+    parts = [upd(*zero(), leaf=ls, X=Xs, y=ys)
+             for ls, Xs, ys in zip(jnp.split(leaf, d), jnp.split(X, d),
+                                   jnp.split(y, d))]
+    while len(parts) > 1:
+        parts = [ops.forest_merge(*parts[i], *parts[i + 1], backend=backend)
+                 for i in range(0, len(parts), 2)]
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        np.asarray(a), np.asarray(b)), parts[0], full)

@@ -1,0 +1,99 @@
+"""Docs gate: ``PYTHONPATH=src python tools/check_docs.py``.
+
+Keeps the documentation layer from rotting silently (CI job ``docs``):
+
+* **link check** — every markdown link in README.md, DESIGN.md and
+  docs/*.md must resolve: relative paths must exist in the repo, and
+  in-repo anchors must match a heading slug of the target file
+  (GitHub's slug rules, close enough: lowercase, punctuation stripped,
+  spaces to dashes).  External http(s) links are syntax-checked only —
+  CI must not flake on the network.
+* **quickstart smoke** — every ```python fenced block in README.md runs
+  top to bottom in ONE shared namespace (so later blocks may build on
+  earlier imports/variables).  The blocks are written self-contained;
+  if a README edit breaks that, this gate fails before a reader does.
+
+Exit code 1 on any failure, with a per-item report.
+"""
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DOC_FILES = ["README.md", "DESIGN.md"]
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+FENCE_RE = re.compile(r"```python\n(.*?)```", re.S)
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.M)
+
+
+def _docs():
+    files = list(DOC_FILES)
+    ddir = os.path.join(REPO, "docs")
+    files += sorted(os.path.join("docs", f) for f in os.listdir(ddir)
+                    if f.endswith(".md"))
+    return files
+
+
+def _slug(heading: str) -> str:
+    """GitHub-style anchor slug of a heading line."""
+    h = re.sub(r"[`*_]", "", heading.strip().lower())
+    h = re.sub(r"[^\w\- ]", "", h, flags=re.UNICODE)
+    return h.replace(" ", "-")
+
+
+def _anchors(path: str) -> set:
+    with open(path) as f:
+        text = f.read()
+    return {_slug(m) for m in HEADING_RE.findall(text)}
+
+
+def check_links() -> list:
+    failures = []
+    for rel in _docs():
+        path = os.path.join(REPO, rel)
+        base = os.path.dirname(path)
+        for target in LINK_RE.findall(open(path).read()):
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            frag = None
+            if "#" in target:
+                target, frag = target.split("#", 1)
+            dest = path if not target else os.path.normpath(
+                os.path.join(base, target))
+            if target and not os.path.exists(dest):
+                failures.append(f"{rel}: broken link -> {target}")
+                continue
+            if frag and dest.endswith(".md") and _slug(frag) not in _anchors(dest):
+                failures.append(f"{rel}: dead anchor -> {target}#{frag}")
+    return failures
+
+
+def run_readme_blocks() -> list:
+    blocks = FENCE_RE.findall(open(os.path.join(REPO, "README.md")).read())
+    ns: dict = {}
+    for i, code in enumerate(blocks):
+        try:
+            exec(compile(code, f"README.md[python #{i}]", "exec"), ns)
+        except Exception as e:  # noqa: BLE001 — report, don't crash the gate
+            return [f"README.md python block #{i} failed: {type(e).__name__}: {e}"]
+    return [] if blocks else ["README.md has no ```python quickstart block"]
+
+
+def main() -> int:
+    failures = check_links()
+    print(f"link check: {len(failures)} failure(s) over {len(_docs())} files")
+    failures += run_readme_blocks()
+    print("README quickstart blocks: ran" if len(failures) == 0
+          else "README quickstart blocks: FAILED")
+    if failures:
+        for f in failures:
+            print(f"  {f}", file=sys.stderr)
+        return 1
+    print("docs gate: all links resolve, quickstart runs")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

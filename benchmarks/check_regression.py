@@ -1,7 +1,8 @@
 """Bench-regression gate: ``PYTHONPATH=src python -m benchmarks.check_regression``.
 
-Reruns the kernel micro-benches, the attempt-fraction query sweep and
-the serving races (best-of-2) and applies two kinds of check:
+Reruns the kernel micro-benches, the attempt-fraction query sweep, the
+serving races and the serving-engine bench (best-of-2) and applies two
+kinds of check:
 
 * **absolute band** — each row's ``us_per_call`` must stay within
   ``TOLERANCE`` (3x) of the committed ``BENCH_kernels.json`` /
@@ -23,14 +24,19 @@ the serving races (best-of-2) and applies two kinds of check:
     BENCH_serve.json acceptance bar is 3x; the CI floor is intentionally
     looser so runner load cannot flake the gate, while a true fallback
     to per-tree routing — ratio ~= 1 with noise both sides — still
-    trips it).
+    trips it);
+  - the serving engine's full admission path must keep
+    ``MIN_ENGINE_FRAC`` (0.8x) of the same-run bare
+    ``serve.predict_snapshot`` throughput at the same batch bucket —
+    catches the queue/accounting layer creeping onto the hot path.
 
   Small-M query cells are reported but ungated: their fixed O(M*F)
   gather/scatter overheads sit too close to the query itself for a
   load-stable ratio.
 
 The fresh sweeps are written to ``BENCH_query.fresh.json`` /
-``BENCH_serve.fresh.json`` (the CI artifacts), NEVER to the committed
+``BENCH_serve.fresh.json`` / ``BENCH_engine.fresh.json`` (the CI
+artifacts), NEVER to the committed
 baselines — only ``benchmarks.run`` rewrites baselines, so running the
 gate locally can never silently shift what future runs are compared
 against.  Exit code 1 on any failure.
@@ -41,15 +47,19 @@ import json
 import os
 import sys
 
+from benchmarks import engine as engine_bench
 from benchmarks import kernels, query_sweep, serve
 from benchmarks.bench_io import REPO_ROOT, write_bench
 
-BASELINES = ("BENCH_kernels.json", "BENCH_query.json", "BENCH_serve.json")
+BASELINES = ("BENCH_kernels.json", "BENCH_query.json", "BENCH_serve.json",
+             "BENCH_engine.json")
 FRESH_ARTIFACT = "BENCH_query.fresh.json"
 SERVE_FRESH_ARTIFACT = "BENCH_serve.fresh.json"
+ENGINE_FRESH_ARTIFACT = "BENCH_engine.fresh.json"
 TOLERANCE = 3.0
 MIN_SPEEDUP = 1.5          # compacted vs full scan, same run, K/M <= 1/8
 MIN_SERVE_SPEEDUP = 1.0    # fused forest predict vs same-run per-tree vmap
+MIN_ENGINE_FRAC = 0.8      # engine throughput vs same-run bare snapshot
 SMALL_FRACTIONS = ("1/64", "1/8")
 MIN_GATED_M = 128          # the acceptance-criterion scale (M = 255)
 
@@ -97,6 +107,9 @@ def main() -> int:
     srows, sreports = _best_of(serve.run, serve.to_rows)
     fresh.extend(srows)
     write_bench(SERVE_FRESH_ARTIFACT, srows)
+    erows, ereports = _best_of(engine_bench.run, engine_bench.to_rows)
+    fresh.extend(erows)
+    write_bench(ENGINE_FRESH_ARTIFACT, erows)
 
     failures = []
     print(f"{'row':<42} {'committed':>10} {'fresh':>10} {'ratio':>7}  verdict")
@@ -144,6 +157,21 @@ def main() -> int:
         failures.append(
             f"serve_forest_predict_fused: only {sp:.2f}x the same-run "
             f"per-tree baseline (structural floor {MIN_SERVE_SPEEDUP}x)")
+
+    # engine structural check: the full admission path (submit -> pack ->
+    # dispatch -> split) must keep >= MIN_ENGINE_FRAC of the same-run bare
+    # predict_snapshot throughput at the same bucket — catches the queue
+    # layer creeping onto the hot path
+    frac = max(rep["race"]["throughput_frac_of_bare"] for rep in ereports)
+    ok = frac >= MIN_ENGINE_FRAC
+    print(f"\n{'engine race':<42} {'frac of bare snapshot':>22}  verdict")
+    print(f"{'engine_serve_once':<42} {frac:>21.2f}x  "
+          f"{'ok' if ok else 'REGRESSION'}")
+    if not ok:
+        failures.append(
+            f"engine_serve_once: only {frac:.2f}x the same-run bare "
+            f"predict_snapshot throughput (structural floor "
+            f"{MIN_ENGINE_FRAC}x)")
 
     if failures:
         print(f"\n{len(failures)} check(s) failed:", file=sys.stderr)

@@ -17,8 +17,8 @@ from repro.models import layers as L
 
 L.set_compute_dtype(jnp.float32)  # CPU container cannot execute bf16 dots
 
-from benchmarks import (aos, dp, forest, kernels, query_sweep,  # noqa: E402
-                        roofline, serve, tree)
+from benchmarks import (aos, dp, engine, forest, kernels,  # noqa: E402
+                        query_sweep, roofline, serve, tree)
 from benchmarks.bench_io import write_bench as _write_bench  # noqa: E402
 
 
@@ -94,6 +94,13 @@ def main() -> None:
     serve_rows = serve.to_rows(srep)
     csv.extend(serve_rows)
     _write_bench("BENCH_serve.json", serve_rows)
+
+    # --- continuous-serving engine: admission overhead + open-loop load ---
+    erep = engine.run()
+    report["engine"] = erep
+    engine_rows = engine.to_rows(erep)
+    csv.extend(engine_rows)
+    _write_bench("BENCH_engine.json", engine_rows)
 
     # --- data-parallel stream scale-out (§4.1; own subprocess for the
     # forced-host-device XLA flags) ----------------------------------------

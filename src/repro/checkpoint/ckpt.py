@@ -12,7 +12,15 @@ Design points for 1000+ node deployments (DESIGN.md §7):
   corrupts the latest checkpoint;
 * an async writer thread overlaps serialization with the next train steps
   (the train loop only blocks if a previous write is still in flight);
-* ``restore`` validates CRCs and returns leaves for the *current* mesh —
+* ``restore`` validates the save-time manifest (per-leaf CRC32 + the
+  schema: shape/dtype of every leaf) and raises
+  :class:`CheckpointCorruption` on ANY defect — truncated/unreadable
+  shard files included — instead of crashing mid-deserialize;
+* ``restore_latest`` walks checkpoints newest-first and silently skips
+  corrupt or truncated ones, falling back to the previous good step (the
+  serving engine's crash-recovery entry point: a trainer killed mid-save
+  must never take recovery down with it);
+* ``restore`` returns leaves for the *current* mesh —
   resharding to a different device count/mesh is free because leaves are
   stored unsharded per host here (single-host container); the
   ``reshard`` helper re-places a restored tree onto any new sharding tree,
@@ -24,15 +32,22 @@ from __future__ import annotations
 import json
 import os
 import shutil
+import sys
 import threading
 import zlib
-from typing import Any, Dict, Optional
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 _SEP = "/"
+
+
+class CheckpointCorruption(IOError):
+    """A checkpoint step failed validation (CRC/schema/shape mismatch,
+    missing leaf, truncated or unreadable file).  Subclasses ``IOError``
+    so pre-existing ``except IOError`` call sites keep working."""
 
 
 def _flatten(tree) -> Dict[str, np.ndarray]:
@@ -48,8 +63,13 @@ def _unflatten_into(template, flat: Dict[str, np.ndarray]):
     leaves = []
     for path, leaf in paths:
         key = _SEP.join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        if key not in flat:
+            raise CheckpointCorruption(f"checkpoint missing leaf {key!r}")
         arr = flat[key]
-        assert arr.shape == tuple(leaf.shape), (key, arr.shape, leaf.shape)
+        if arr.shape != tuple(leaf.shape):
+            raise CheckpointCorruption(
+                f"checkpoint leaf {key!r} shape {arr.shape} != template "
+                f"{tuple(leaf.shape)}")
         leaves.append(arr.astype(leaf.dtype))
     return jax.tree_util.tree_unflatten(tdef, leaves)
 
@@ -125,6 +145,12 @@ class Checkpointer:
             return None
         return int(name.split("_")[1])
 
+    def available_steps(self) -> List[int]:
+        """All step directories on disk, ascending (completed renames
+        only — a crashed writer's ``.tmp_step_*`` never appears)."""
+        return sorted(int(d.split("_")[1]) for d in os.listdir(self.dir)
+                      if d.startswith("step_"))
+
     def restore(self, step: int, template, verify: bool = True):
         """CRC-checked restore into the structure of ``template``.
 
@@ -139,25 +165,67 @@ class Checkpointer:
         pinned bitwise by tests/test_checkpoint.py.
         """
         d = os.path.join(self.dir, f"step_{step:09d}")
-        with open(os.path.join(d, "manifest.json")) as f:
-            manifest = json.load(f)
-        flat = dict(np.load(os.path.join(d, f"shard_{self.host_id}.npz")))
+        try:
+            with open(os.path.join(d, "manifest.json")) as f:
+                manifest = json.load(f)
+            flat = dict(np.load(os.path.join(d, f"shard_{self.host_id}.npz")))
+        except CheckpointCorruption:
+            raise
+        except Exception as e:
+            # truncated npz (BadZipFile), missing files, mangled json, a
+            # leaf npy cut short mid-write — all surface as ONE typed
+            # error instead of crashing mid-deserialize
+            raise CheckpointCorruption(
+                f"checkpoint step {step} unreadable: {e!r}") from e
         if verify:
+            leaves = manifest.get("leaves", {})
+            if set(leaves) != set(flat):
+                raise CheckpointCorruption(
+                    f"checkpoint corruption at step {step}: manifest names "
+                    f"{len(leaves)} leaves, shard holds {len(flat)}")
             for k, v in flat.items():
-                want = manifest["leaves"][k]["crc32"]
-                got = zlib.crc32(v.tobytes())
-                if want != got:
-                    raise IOError(f"checkpoint corruption in leaf {k!r}")
+                meta = leaves[k]
+                if (list(v.shape) != meta["shape"]
+                        or str(v.dtype) != meta["dtype"]):
+                    raise CheckpointCorruption(
+                        f"checkpoint corruption in leaf {k!r}: saved "
+                        f"{v.shape}/{v.dtype} != manifest "
+                        f"{meta['shape']}/{meta['dtype']}")
+                if meta["crc32"] != zlib.crc32(v.tobytes()):
+                    raise CheckpointCorruption(
+                        f"checkpoint corruption in leaf {k!r}")
         return _unflatten_into(template, flat)
 
-    def restore_latest(self, template, verify: bool = True):
-        """Restore the step the LATEST pointer names (the crash-recovery
-        entry point); raises ``FileNotFoundError`` when no checkpoint
-        has ever completed."""
-        step = self.latest_step()
-        if step is None:
-            raise FileNotFoundError(f"no checkpoint under {self.dir!r}")
-        return self.restore(step, template, verify=verify)
+    def restore_latest(self, template, verify: bool = True,
+                       return_step: bool = False):
+        """Restore the newest *valid* checkpoint (the crash-recovery
+        entry point).
+
+        Starts at the LATEST pointer, then walks every completed step
+        directory newest-first: a corrupt, truncated or schema-mismatched
+        step is logged and SKIPPED (falling back to the previous good
+        one) instead of crashing recovery — the fault the atomic-rename
+        writer cannot rule out is a torn *disk*, not a torn rename.
+        Raises ``FileNotFoundError`` when no valid checkpoint exists.
+        ``return_step=True`` returns ``(tree, step)`` so a recovering
+        trainer knows where to resume its stream.
+        """
+        candidates = []
+        latest = self.latest_step()
+        if latest is not None:
+            candidates.append(latest)
+        for s in sorted(self.available_steps(), reverse=True):
+            if s not in candidates:
+                candidates.append(s)
+        for step in candidates:
+            try:
+                tree = self.restore(step, template, verify=verify)
+            except CheckpointCorruption as e:
+                print(f"checkpoint: skipping step {step}: {e}",
+                      file=sys.stderr)
+                continue
+            return (tree, step) if return_step else tree
+        raise FileNotFoundError(f"no valid checkpoint under {self.dir!r}")
 
 
 def reshard(tree, sharding_tree):

@@ -44,7 +44,8 @@ import numpy as np
 
 from repro.kernels import ops as kops
 
-__all__ = ["Snapshot", "freeze", "predict_snapshot", "clear_jit_caches"]
+__all__ = ["Snapshot", "SnapshotValidationError", "freeze",
+           "validate_snapshot", "predict_snapshot", "clear_jit_caches"]
 
 
 @dataclass(frozen=True)
@@ -57,6 +58,16 @@ class Snapshot:
     f32, ``vote_w`` (T,) f32 (ones for a single tree).  ``depth`` (the
     realized ply count) and ``single`` are static aux data, so a
     Snapshot passes through jit/shard_map whole.
+
+    ``version`` / ``step`` are scalar i32 *leaves*, not aux data: a
+    publisher stamps every freeze with a monotonically increasing
+    version and the trainer step it froze at, and because they ride as
+    array leaves (i) re-publishing never changes the treedef — cached
+    serving jits and ``build_sharded_serving`` builds stay warm across
+    versions — and (ii) they round-trip through
+    :class:`repro.checkpoint.ckpt.Checkpointer` by *value*, so staleness
+    and rollback tests pin snapshot identity instead of comparing whole
+    pytrees.
     """
     feature: jax.Array
     threshold: jax.Array
@@ -66,13 +77,79 @@ class Snapshot:
     vote_w: jax.Array
     depth: int
     single: bool
+    version: jax.Array | int = 0
+    step: jax.Array | int = 0
 
 
 jax.tree_util.register_pytree_node(
     Snapshot,
     lambda s: ((s.feature, s.threshold, s.child, s.is_leaf, s.leaf_mean,
-                s.vote_w), (s.depth, s.single)),
-    lambda aux, ch: Snapshot(*ch, *aux))
+                s.vote_w, s.version, s.step), (s.depth, s.single)),
+    lambda aux, ch: Snapshot(*ch[:6], *aux, *ch[6:]))
+
+
+class SnapshotValidationError(ValueError):
+    """A Snapshot violates the serving invariants (torn/corrupt model)."""
+
+
+def validate_snapshot(snap: Snapshot) -> Snapshot:
+    """Check the serving invariants; raise :class:`SnapshotValidationError`.
+
+    The publish gate of the continuous-serving engine (DESIGN.md §5.6):
+    every snapshot must satisfy, per tree,
+
+    * finite thresholds and in-range feature ids on internal nodes;
+    * children ids inside ``[0, Mr)``, each strictly greater than its
+      parent's id and claimed by exactly one parent, root never a child
+      — the BFS level-order contract :func:`_bfs_reindex` establishes;
+    * ``-1`` children at leaves (pad rows are self-contained leaves);
+    * finite leaf means and finite, non-negative vote weights;
+    * non-negative ``version`` / ``step`` stamps.
+
+    A host-side O(T·Mr) numpy pass — called once per freeze/publish,
+    never on the per-request path.  Returns ``snap`` unchanged so
+    callers can gate inline: ``publish(validate_snapshot(s))``.
+    """
+    feat = np.asarray(snap.feature)
+    thr = np.asarray(snap.threshold)
+    child = np.asarray(snap.child)
+    is_leaf = np.asarray(snap.is_leaf)
+    mean = np.asarray(snap.leaf_mean)
+    vote_w = np.asarray(snap.vote_w)
+    T, Mr = feat.shape
+
+    def bad(msg):
+        raise SnapshotValidationError(
+            f"snapshot v{int(np.asarray(snap.version))} "
+            f"(step {int(np.asarray(snap.step))}): {msg}")
+
+    if not (np.isfinite(vote_w).all() and (vote_w >= 0).all()):
+        bad("vote weights must be finite and non-negative")
+    if not np.isfinite(mean).all():
+        bad("leaf means must be finite")
+    if int(np.asarray(snap.version)) < 0 or int(np.asarray(snap.step)) < 0:
+        bad("version/step stamps must be non-negative")
+    for t in range(T):
+        internal = ~is_leaf[t]
+        if not np.isfinite(thr[t][internal]).all():
+            bad(f"tree {t}: non-finite threshold on an internal node")
+        if internal.any() and (feat[t][internal] < 0).any():
+            bad(f"tree {t}: negative feature id on an internal node")
+        ch = child[t][internal]                       # (n_internal, 2)
+        if (child[t][~internal] != -1).any():
+            bad(f"tree {t}: leaf rows must carry -1 children")
+        if internal.any():
+            if ch.min() < 0 or ch.max() >= Mr:
+                bad(f"tree {t}: child id out of range [0, {Mr})")
+            parents = np.nonzero(internal)[0]
+            if (ch <= parents[:, None]).any():
+                bad(f"tree {t}: child id <= parent id breaks the BFS "
+                    f"level-order contract")
+            flat = ch.reshape(-1)
+            if len(np.unique(flat)) != len(flat) or (flat == 0).any():
+                bad(f"tree {t}: a node is claimed by two parents (or the "
+                    f"root is a child)")
+    return snap
 
 
 def _bfs_reindex(feature, threshold, child, is_leaf, mean, Mr: int):
@@ -109,7 +186,7 @@ def _bfs_reindex(feature, threshold, child, is_leaf, mean, Mr: int):
     return f, thr, ch, lf, mu, (max(node_depth) if n else 0)
 
 
-def freeze(state) -> Snapshot:
+def freeze(state, *, version: int = 0, step: int = 0) -> Snapshot:
     """Pack a trained tree or forest state into a serving Snapshot.
 
     ``state``: a :func:`repro.core.hoeffding.init_state` pytree (single
@@ -119,6 +196,13 @@ def freeze(state) -> Snapshot:
     train/serve boundary, not inside a jit).  Capacity is trimmed to the
     realized node count (power-of-two bucketed, min 8) and ``depth`` to
     the deepest realized leaf across members.
+
+    ``version``/``step``: the publisher's identity stamps (monotone
+    version counter, trainer step frozen at) — scalar i32 leaves on the
+    returned snapshot.  Every freeze runs :func:`validate_snapshot`
+    before returning, so a snapshot that ever reaches a serving engine
+    is structurally valid by construction; the engine's publish path
+    re-validates after its fault-injection hooks (the rollback gate).
     """
     if "trees" in state:
         trees, vote_w, single = state["trees"], state["vote_w"], False
@@ -139,11 +223,13 @@ def freeze(state) -> Snapshot:
     packed = [_bfs_reindex(feat[t], thr[t], child[t], is_leaf[t], mean[t], Mr)
               for t in range(T)]
     stack = lambda i: jnp.asarray(np.stack([p[i] for p in packed]))
-    return Snapshot(
+    return validate_snapshot(Snapshot(
         feature=stack(0), threshold=stack(1), child=stack(2),
         is_leaf=stack(3), leaf_mean=stack(4),
         vote_w=jnp.asarray(vote_w, jnp.float32),
-        depth=max(p[5] for p in packed), single=single)
+        depth=max(p[5] for p in packed), single=single,
+        version=jnp.asarray(version, jnp.int32),
+        step=jnp.asarray(step, jnp.int32)))
 
 
 def _predict_impl(feature, threshold, child, is_leaf, leaf_mean, vote_w, X,

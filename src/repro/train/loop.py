@@ -88,7 +88,16 @@ class Trainer:
 
     # -- run --------------------------------------------------------------
 
-    def run(self, log_fn: Callable[[Dict[str, Any]], None] = print):
+    def run(self, log_fn: Callable[[Dict[str, Any]], None] = print,
+            publish_fn: Optional[Callable[[int, Any], None]] = None):
+        """Train to ``total_steps``; ``publish_fn(step, params)`` is the
+        LM loop's **publish boundary** (DESIGN.md §5.6) — fired right
+        after every checkpoint save (periodic, preemption and final),
+        the same train→serve handoff cadence the streaming engine's
+        ``freeze``+publish follows, so a serving frontend can hot-swap
+        the newest params without ever touching the training thread's
+        state mid-step.  Exceptions out of ``publish_fn`` are deliberately
+        NOT caught here: the publisher owns its own degradation."""
         self._install_signals()
         params, opt, mon, start = self.init_or_restore()
         history = []
@@ -117,12 +126,18 @@ class Trainer:
 
                 if (step + 1) % self.lc.ckpt_every == 0:
                     self.ckpt.save(step + 1, {"params": params, "opt": opt})
+                    if publish_fn is not None:
+                        publish_fn(step + 1, params)
 
                 if self._preempted:
                     log_fn({"step": step, "event": "preempted — final save"})
                     self.ckpt.save(step + 1, {"params": params, "opt": opt},
                                    blocking=True)
+                    if publish_fn is not None:
+                        publish_fn(step + 1, params)
                     return params, opt, mon, history
             self.ckpt.save(self.lc.total_steps, {"params": params, "opt": opt},
                            blocking=True)
+            if publish_fn is not None:
+                publish_fn(self.lc.total_steps, params)
         return params, opt, mon, history

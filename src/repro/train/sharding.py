@@ -642,7 +642,8 @@ class DataParallelForest(NamedTuple):
 
 def build_data_parallel_forest(fcfg, mesh: Mesh, axis: str = "data",
                                sync_every: int = 1,
-                               compress: str | None = None):
+                               compress: str | None = None,
+                               on_sync=None):
     """Data-parallel stream scale-out (DESIGN.md §4.1).
 
     The third and last sharding axis: :func:`build_sharded_forest`
@@ -678,6 +679,15 @@ def build_data_parallel_forest(fcfg, mesh: Mesh, axis: str = "data",
       unconditional sync;
     * ``predict(dpstate, X) -> (B,)`` — request-sharded vote over the
       replicated forest (no collectives; D must divide B).
+
+    ``on_sync``: optional ``on_sync(forest_state, step, aux)`` callback
+    fired at every sync boundary with the freshly merged (replicated)
+    forest — the **publish boundary** of the continuous-serving engine
+    (DESIGN.md §5.6): a
+    :class:`repro.core.engine.ServingEngine`'s publisher hooks here
+    (``freeze`` + validated atomic swap), so serving freshness rides the
+    ``sync_every`` cadence directly.  Exceptions out of ``on_sync`` are
+    the CALLER's (a publish failure must not poison training).
     """
     from jax.experimental.shard_map import shard_map
 
@@ -751,7 +761,10 @@ def build_data_parallel_forest(fcfg, mesh: Mesh, axis: str = "data",
 
     def _synced(dpstate, delta, keys, step):
         forest, aux = sync(dpstate["forest"], delta)
-        return {"forest": jax.device_put(forest, forest_repl),
+        forest = jax.device_put(forest, forest_repl)
+        if on_sync is not None:
+            on_sync(forest, step, aux)        # the publish boundary
+        return {"forest": forest,
                 "delta": zero_delta, "keys": keys, "step": step}, aux
 
     def update_fn(dpstate, X, y):
@@ -777,7 +790,8 @@ def build_data_parallel_forest(fcfg, mesh: Mesh, axis: str = "data",
                               lambda dpstate, X: prd(dpstate["forest"], X))
 
 
-def build_data_parallel_reference(fcfg, n_shards: int, sync_every: int = 1):
+def build_data_parallel_reference(fcfg, n_shards: int, sync_every: int = 1,
+                                  on_sync=None):
     """Single-device oracle of :func:`build_data_parallel_forest`.
 
     The SAME protocol with the shard axis as a local ``vmap`` instead of
@@ -810,6 +824,8 @@ def build_data_parallel_reference(fcfg, n_shards: int, sync_every: int = 1):
 
     def _synced(dpstate, delta, keys, step):
         forest, aux = _dp_sync_jit(fcfg)(dpstate["forest"], delta)
+        if on_sync is not None:
+            on_sync(forest, step, aux)        # the same publish boundary
         return {"forest": forest,
                 "delta": _dp_init_delta(fcfg, n_shards),
                 "keys": keys, "step": step}, aux

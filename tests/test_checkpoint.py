@@ -127,3 +127,81 @@ def test_reshard_onto_new_sharding(tmp_path):
     placed = reshard(rest, sh)
     assert placed["w"].sharding == sh["w"]
     np.testing.assert_allclose(np.asarray(placed["w"]), np.asarray(tree["w"]))
+
+
+# --------------------------------------------------------------------------
+# validated restore: corrupt checkpoints are skipped, never served
+# --------------------------------------------------------------------------
+
+def _corrupt_shard(tmp_path, step):
+    shard = tmp_path / f"step_{step:09d}" / "shard_0.npz"
+    data = dict(np.load(shard))
+    k = sorted(data)[0]
+    data[k] = data[k] + 1.0
+    np.savez(shard, **data)
+
+
+def test_available_steps_lists_completed_dirs(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep=10)
+    tree = _tree(jax.random.PRNGKey(4))
+    for s in (3, 1, 2):
+        ck.save(s, tree, blocking=True)
+    assert ck.available_steps() == [1, 2, 3]
+    # a crashed writer's temp dir never shows up
+    os.makedirs(tmp_path / ".tmp_step_000000009")
+    assert ck.available_steps() == [1, 2, 3]
+
+
+def test_restore_latest_falls_back_past_corrupt_newest(tmp_path):
+    """The crash-recovery contract: a torn newest checkpoint is skipped
+    and the previous good step is served, with its true step id."""
+    ck = Checkpointer(str(tmp_path), keep=10)
+    good = _tree(jax.random.PRNGKey(5))
+    ck.save(1, good, blocking=True)
+    ck.save(2, jax.tree.map(lambda a: a * 0 + 9.0
+                            if a.dtype.kind == "f" else a, good),
+            blocking=True)
+    _corrupt_shard(tmp_path, 2)
+    rest, step = ck.restore_latest(jax.eval_shape(lambda: good),
+                                   return_step=True)
+    assert step == 1
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        np.asarray(a), np.asarray(b)), good, rest)
+
+
+def test_restore_latest_falls_back_past_truncated_npz(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep=10)
+    good = _tree(jax.random.PRNGKey(6))
+    ck.save(4, good, blocking=True)
+    ck.save(7, good, blocking=True)
+    shard = tmp_path / "step_000000007" / "shard_0.npz"
+    shard.write_bytes(shard.read_bytes()[:40])  # cut mid-write
+    rest, step = ck.restore_latest(jax.eval_shape(lambda: good),
+                                   return_step=True)
+    assert step == 4
+
+
+def test_restore_latest_raises_when_nothing_valid(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    tree = _tree(jax.random.PRNGKey(7))
+    ck.save(1, tree, blocking=True)
+    _corrupt_shard(tmp_path, 1)
+    with pytest.raises(FileNotFoundError, match="no valid checkpoint"):
+        ck.restore_latest(jax.eval_shape(lambda: tree))
+
+
+def test_restore_detects_schema_mismatch(tmp_path):
+    """Shape/dtype drift between manifest and shard is corruption, not
+    an assert — the serving engine must survive it."""
+    from repro.checkpoint.ckpt import CheckpointCorruption
+
+    ck = Checkpointer(str(tmp_path))
+    tree = _tree(jax.random.PRNGKey(8))
+    ck.save(1, tree, blocking=True)
+    shard = tmp_path / "step_000000001" / "shard_0.npz"
+    data = dict(np.load(shard))
+    k = sorted(data)[0]
+    data[k] = data[k].reshape(-1)  # same bytes, wrong shape
+    np.savez(shard, **data)
+    with pytest.raises(CheckpointCorruption, match="corruption in leaf"):
+        ck.restore(1, jax.eval_shape(lambda: tree))

@@ -344,3 +344,92 @@ def test_batch_sharded_serving_matches_single_device():
     deeper = dataclasses.replace(snap, depth=ops.depth_bucket(snap.depth) + 1)
     with pytest.raises(ValueError, match="rebuild"):
         pred(deeper, Xt)
+
+
+# --------------------------------------------------------------------------
+# publish-validation gate: validate_snapshot + freeze version stamps
+# --------------------------------------------------------------------------
+
+def _chain_snap():
+    """Frozen chain tree — guaranteed internal nodes at every depth, so
+    corruption sites exist regardless of how training happened to grow."""
+    return sv.freeze(_chain_tree(CFG))
+
+
+def test_validate_snapshot_accepts_healthy_trees():
+    s, _ = _trained_tree()
+    assert sv.validate_snapshot(sv.freeze(s)) is not None
+    cfg, fs, _ = _trained_forest()
+    snap = sv.freeze(fs, version=3, step=12)
+    assert sv.validate_snapshot(snap) is snap  # returns it for inline gating
+
+
+def test_validate_rejects_nan_threshold_on_internal_node():
+    import dataclasses
+    snap = _chain_snap()
+    bad = dataclasses.replace(
+        snap, threshold=snap.threshold.at[0, 0].set(jnp.nan))
+    with pytest.raises(sv.SnapshotValidationError,
+                       match="non-finite threshold"):
+        sv.validate_snapshot(bad)
+
+
+def test_validate_rejects_child_out_of_range():
+    import dataclasses
+    snap = _chain_snap()
+    Mr = snap.child.shape[1]
+    bad = dataclasses.replace(snap, child=snap.child.at[0, 0, 1].set(Mr))
+    with pytest.raises(sv.SnapshotValidationError, match="out of range"):
+        sv.validate_snapshot(bad)
+
+
+def test_validate_rejects_level_order_violation():
+    import dataclasses
+    snap = _chain_snap()
+    # point an internal node's child back at the root: breaks both
+    # child > parent and root-never-a-child
+    bad = dataclasses.replace(snap, child=snap.child.at[0, 0, 1].set(0))
+    with pytest.raises(sv.SnapshotValidationError, match="BFS|root"):
+        sv.validate_snapshot(bad)
+
+
+def test_validate_rejects_leaf_with_children():
+    import dataclasses
+    snap = _chain_snap()
+    leaf = int(np.nonzero(np.asarray(snap.is_leaf[0]))[0][0])
+    bad = dataclasses.replace(snap, child=snap.child.at[0, leaf, 0].set(1))
+    with pytest.raises(sv.SnapshotValidationError, match="-1 children"):
+        sv.validate_snapshot(bad)
+
+
+def test_validate_rejects_bad_vote_weights_and_means():
+    import dataclasses
+    cfg, fs, _ = _trained_forest()
+    snap = sv.freeze(fs)
+    for field, val, msg in [
+            ("vote_w", jnp.nan, "vote weights"),
+            ("vote_w", -1.0, "vote weights"),
+            ("leaf_mean", jnp.inf, "leaf means")]:
+        arr = getattr(snap, field)
+        flat_bad = arr.reshape(-1).at[0].set(val).reshape(arr.shape)
+        with pytest.raises(sv.SnapshotValidationError, match=msg):
+            sv.validate_snapshot(dataclasses.replace(snap, **{field: flat_bad}))
+
+
+def test_freeze_stamps_version_and_step():
+    """version/step ride as i32 *leaves* (not static aux): republishing
+    never changes the treedef, so the cached routing jits stay warm and
+    the stamps round-trip through the checkpointer by value."""
+    s, Xt = _trained_tree()
+    snap = sv.freeze(s, version=5, step=40)
+    assert (int(snap.version), int(snap.step)) == (5, 40)
+    default = sv.freeze(s)
+    assert (int(default.version), int(default.step)) == (0, 0)
+    same_def = jax.tree_util.tree_structure(snap) == \
+        jax.tree_util.tree_structure(default)
+    assert same_def, "version bump must not change the treedef"
+    np.testing.assert_array_equal(
+        np.asarray(sv.predict_snapshot(snap, Xt)),
+        np.asarray(sv.predict_snapshot(default, Xt)))
+    with pytest.raises(sv.SnapshotValidationError, match="non-negative"):
+        sv.freeze(s, version=-1)

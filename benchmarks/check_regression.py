@@ -12,6 +12,14 @@ kinds of check:
   catches order-of-magnitude breakage.  Rows without a committed
   baseline and accuracy-only rows (``us_per_call == 0``) are reported
   but never fail.
+* **statistical gates** — the split-decision validity suite
+  (:mod:`benchmarks.false_splits`, fixed seeds, so these are exact
+  reproductions, not noisy timings): the anytime backend's false-split
+  rate on no-signal streams must stay ≤ its configured α while the
+  Hoeffding backend's must still exceed it (the §2.7 premise), and the
+  anytime drift-suite prequential MSE must stay within
+  ``false_splits.MAX_MSE_RATIO`` of the Hoeffding backend's.
+
 * **structural ratios** — machine-independent, measured inside ONE run:
 
   - at small attempt fractions (K/M <= 1/8) on forests of
@@ -48,14 +56,15 @@ import os
 import sys
 
 from benchmarks import engine as engine_bench
-from benchmarks import kernels, query_sweep, serve
+from benchmarks import false_splits, kernels, query_sweep, serve
 from benchmarks.bench_io import REPO_ROOT, write_bench
 
 BASELINES = ("BENCH_kernels.json", "BENCH_query.json", "BENCH_serve.json",
-             "BENCH_engine.json")
+             "BENCH_engine.json", "BENCH_splits.json")
 FRESH_ARTIFACT = "BENCH_query.fresh.json"
 SERVE_FRESH_ARTIFACT = "BENCH_serve.fresh.json"
 ENGINE_FRESH_ARTIFACT = "BENCH_engine.fresh.json"
+SPLITS_FRESH_ARTIFACT = "BENCH_splits.fresh.json"
 TOLERANCE = 3.0
 MIN_SPEEDUP = 1.5          # compacted vs full scan, same run, K/M <= 1/8
 MIN_SERVE_SPEEDUP = 1.0    # fused forest predict vs same-run per-tree vmap
@@ -110,6 +119,11 @@ def main() -> int:
     erows, ereports = _best_of(engine_bench.run, engine_bench.to_rows)
     fresh.extend(erows)
     write_bench(ENGINE_FRESH_ARTIFACT, erows)
+    # fixed-seed statistical suite: deterministic, one rep is exact
+    fsreport = false_splits.run()
+    fsrows = false_splits.to_rows(fsreport)
+    fresh.extend(fsrows)
+    write_bench(SPLITS_FRESH_ARTIFACT, fsrows)
 
     failures = []
     print(f"{'row':<42} {'committed':>10} {'fresh':>10} {'ratio':>7}  verdict")
@@ -172,6 +186,28 @@ def main() -> int:
             f"engine_serve_once: only {frac:.2f}x the same-run bare "
             f"predict_snapshot throughput (structural floor "
             f"{MIN_ENGINE_FRAC}x)")
+
+    # split-decision statistical gates (fixed seeds — exact, not timing):
+    # anytime ≤ α on noise, hoeffding > α (the §2.7 premise), drift MSE
+    # ratio within the acceptance bar
+    fs, dr = fsreport["false_splits"], fsreport["drift"]
+    checks = [
+        ("anytime_false_split_rate", fs["anytime"]["rate"],
+         f"<= {fs['anytime']['alpha']}",
+         fs["anytime"]["rate"] <= fs["anytime"]["alpha"]),
+        ("hoeffding_false_split_rate", fs["hoeffding"]["rate"],
+         f">  {fs['hoeffding']['alpha']} (motivating defect)",
+         fs["hoeffding"]["rate"] > fs["hoeffding"]["alpha"]),
+        ("drift_preq_mse_ratio", dr["mse_ratio"],
+         f"<= {false_splits.MAX_MSE_RATIO}",
+         dr["mse_ratio"] <= false_splits.MAX_MSE_RATIO),
+    ]
+    print(f"\n{'statistical gate':<42} {'value':>10} {'bound':>28}  verdict")
+    for name, val, bound, ok in checks:
+        print(f"{name:<42} {val:>10.3f} {bound:>28}  "
+              f"{'ok' if ok else 'REGRESSION'}")
+        if not ok:
+            failures.append(f"{name}: {val:.3f} violates {bound}")
 
     if failures:
         print(f"\n{len(failures)} check(s) failed:", file=sys.stderr)

@@ -1,0 +1,149 @@
+"""Statistical validation of the split-decision backends (DESIGN.md §2.7).
+
+Three measurements, all deterministic given the seeds — the first two are
+machine-independent statistical gates, not wall-times:
+
+* **false-split rate** — trees trained on pure-noise streams (y
+  independent of X) under the ``eager`` schedule, where every mature
+  leaf re-tests every batch.  ANY split is a false split.  The anytime
+  e-process backend must keep the empirical rate ≤ its configured α;
+  the Hoeffding ratio test exceeds it (its fixed-n bound is voided by
+  the peeking, and its ``eps < tau`` tie-break fires unconditionally
+  once ``n > ln(1/delta)/(2 tau^2)``) — the motivating defect, kept
+  measured so the gap never silently closes.
+* **drift prequential MSE** — test-then-train MSE on the shared
+  concept-drift suite (:func:`benchmarks.forest.drift_stream`) under
+  ``eager``, anytime vs Hoeffding.  The e-process must not give back
+  the statistical win as accuracy: the gate is ratio ≤ 1.05 (in
+  practice it is *better* — fewer noise splits means less capacity
+  wasted before the drift and cleaner leaves after it).
+* **decision-stage µs/attempt** — wall time of one jitted
+  :func:`repro.core.decide.decide` call on an (M, F) merit table, per
+  backend (the stage is a few fused elementwise ops + a top-k; it must
+  stay negligible next to the query that feeds it).
+
+``python -m benchmarks.run`` writes the rows to BENCH_splits.json;
+``check_regression`` re-runs this module and enforces the two
+statistical gates as structural (machine-independent) checks.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import decide as dc
+from repro.core import hoeffding as ht
+from benchmarks.forest import drift_stream
+
+ALPHA = 0.1          # alpha == delta so both backends claim the same risk
+N_SEEDS = 12
+MAX_MSE_RATIO = 1.05  # drift-suite acceptance bar: anytime vs hoeffding
+
+
+def _noise_cfg(backend: str) -> ht.HTRConfig:
+    return ht.HTRConfig(n_features=4, max_nodes=31, n_bins=32,
+                        grace_period=100, delta=ALPHA, tau=0.05,
+                        max_depth=6, r0=0.3, split_backend="jnp",
+                        attempt_schedule="eager",
+                        decision_backend=backend, alpha=ALPHA)
+
+
+def false_split_rates(n_seeds: int = N_SEEDS, n: int = 4000, seed0: int = 100):
+    out = {}
+    for backend in dc.DECISION_BACKENDS:
+        cfg = _noise_cfg(backend)
+        hits = 0
+        for i in range(n_seeds):
+            rng = np.random.default_rng(seed0 + i)
+            X = jnp.array(rng.normal(size=(n, 4)), jnp.float32)
+            y = jnp.array(rng.normal(size=n), jnp.float32)
+            s = ht.update_stream(cfg, ht.init_state(cfg), X, y,
+                                 batch_size=64)
+            hits += int(s["n_nodes"]) > 1
+        out[backend] = {"false_splits": hits, "seeds": n_seeds,
+                        "rate": hits / n_seeds, "alpha": ALPHA}
+    return out
+
+
+def _drift_cfg(backend: str) -> ht.HTRConfig:
+    return ht.HTRConfig(n_features=4, max_nodes=63, n_bins=48,
+                        grace_period=300, max_depth=8, r0=0.25,
+                        split_backend="jnp", attempt_schedule="eager",
+                        decision_backend=backend, alpha=0.05)
+
+
+def drift_prequential(n: int = 12288, bs: int = 256):
+    X, y = drift_stream(n, 4, seed=11)
+    X, y = jnp.array(X), jnp.array(y)
+    out = {}
+    for backend in dc.DECISION_BACKENDS:
+        cfg = _drift_cfg(backend)
+        Xc, yc, wc = ht.pad_stream(X, y, None, bs)
+
+        def body(s, xyw, cfg=cfg):
+            xb, yb, wb = xyw
+            yhat = ht.predict(cfg, s, xb)
+            mse = jnp.sum(wb * (yhat - yb) ** 2) / jnp.maximum(wb.sum(), 1.0)
+            return ht.update(cfg, s, xb, yb, wb), mse
+
+        s, mses = jax.jit(lambda st: jax.lax.scan(body, st, (Xc, yc, wc)))(
+            ht.init_state(cfg))
+        out[backend] = {"preq_mse": float(jnp.mean(mses)),
+                        "n_nodes": int(s["n_nodes"])}
+    out["mse_ratio"] = (out["anytime"]["preq_mse"]
+                        / out["hoeffding"]["preq_mse"])
+    return out
+
+
+def decide_latency(M: int = 63, F: int = 4, trials: int = 200):
+    """µs per jitted decision-stage call, per backend (M leaves looked
+    at once — the per-attempt cost is this over K)."""
+    rng = np.random.default_rng(0)
+    n = jnp.array(rng.uniform(100, 5000, M).astype(np.float32))
+    state = {"ystats": {"n": n, "mean": jnp.zeros((M,)), "m2": n * 2.0},
+             "dec_logE": jnp.array(rng.uniform(0, 2, (M, F)),
+                                   dtype=jnp.float32),
+             "dec_n_last": n * 0.5}
+    merit = jnp.array(rng.uniform(0, 1.5, (M, F)).astype(np.float32))
+    attempt = jnp.array(rng.random(M) < 0.5)
+    out = {}
+    for backend in dc.DECISION_BACKENDS:
+        cfg = _noise_cfg(backend)
+        fn = jax.jit(lambda st, m, a, cfg=cfg: dc.decide(cfg, st, m, a))
+        jax.block_until_ready(fn(state, merit, attempt))
+        t0 = time.perf_counter()
+        for _ in range(trials):
+            r = fn(state, merit, attempt)
+        jax.block_until_ready(r)
+        out[backend] = (time.perf_counter() - t0) / trials * 1e6
+    return out
+
+
+def run():
+    return {"false_splits": false_split_rates(),
+            "drift": drift_prequential(),
+            "decide_us": decide_latency()}
+
+
+def to_rows(report):
+    fs, dr = report["false_splits"], report["drift"]
+    rows = []
+    for b in dc.DECISION_BACKENDS:
+        r = fs[b]
+        # statistical rows: us_per_call = 0 (accuracy-only, never timed)
+        rows.append((f"false_split_rate_{b}", 0.0,
+                     f"rate={r['rate']:.3f} ({r['false_splits']}/"
+                     f"{r['seeds']}) alpha={r['alpha']} schedule=eager"))
+    rows.append(("drift_preq_mse_anytime_vs_hoeffding", 0.0,
+                 f"mse_ratio={dr['mse_ratio']:.3f}"
+                 f" anytime={dr['anytime']['preq_mse']:.3f}"
+                 f" hoeffding={dr['hoeffding']['preq_mse']:.3f}"
+                 f" nodes={dr['anytime']['n_nodes']}/"
+                 f"{dr['hoeffding']['n_nodes']}"))
+    for b in dc.DECISION_BACKENDS:
+        rows.append((f"decide_stage_{b}", report["decide_us"][b],
+                     "jitted decide() on (63,4) merit, µs/call"))
+    return rows

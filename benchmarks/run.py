@@ -17,8 +17,8 @@ from repro.models import layers as L
 
 L.set_compute_dtype(jnp.float32)  # CPU container cannot execute bf16 dots
 
-from benchmarks import (aos, dp, engine, forest, kernels,  # noqa: E402
-                        query_sweep, roofline, serve, tree)
+from benchmarks import (aos, dp, engine, false_splits, forest,  # noqa: E402
+                        kernels, query_sweep, roofline, serve, tree)
 from benchmarks.bench_io import write_bench as _write_bench  # noqa: E402
 
 
@@ -109,6 +109,13 @@ def main() -> None:
     dp_rows = dp.to_rows(drep)
     csv.extend(dp_rows)
     _write_bench("BENCH_dp.json", dp_rows)
+
+    # --- split-decision validity: false-split rates + drift MSE (§2.7) ----
+    fsrep = false_splits.run()
+    report["false_splits"] = fsrep
+    fs_rows = false_splits.to_rows(fsrep)
+    csv.extend(fs_rows)
+    _write_bench("BENCH_splits.json", fs_rows)
 
     # --- kernel micro-benches ---------------------------------------------
     krep = kernels.run()

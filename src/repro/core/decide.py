@@ -1,0 +1,201 @@
+"""Split-decision backends: fixed-n Hoeffding bound vs anytime-valid
+e-process (DESIGN.md §2.7).
+
+The third stage of the tree hot path (route -> absorb -> attempt) ends in
+a *decision*: given the (M, F) merit table the compacted query produced,
+which attempting leaves actually split, and on which feature?  This
+module is that decision stage, factored out of
+:mod:`repro.core.hoeffding` so the tree and the folded forest share ONE
+vmappable implementation, selected by ``HTRConfig.decision_backend``:
+
+* ``"hoeffding"`` (default) — the FIMT ratio test the repo has always
+  shipped, bit-identical to the pre-factoring trees: split when
+  ``vr2/vr1 < 1 - eps`` with ``eps = sqrt(ln(1/delta) / (2 n))`` or when
+  ``eps < tau`` (tie break).  The bound is a FIXED-n guarantee: it
+  controls the error of ONE look at the statistics.  Under the §2.5
+  ``eager`` schedule (and under any re-attempt cadence) the same leaf is
+  tested again and again as mass accumulates, so the realized false-split
+  rate is a union over looks and silently exceeds ``delta`` — the
+  continuous-peeking defect this module exists to fix (Amoukou et al.,
+  PAPERS.md).
+
+* ``"anytime"`` — an e-value / confidence-sequence test that stays valid
+  at EVERY look.  Each (leaf, feature) pair carries a running e-process
+  over the *variance-explained fraction* ``eta_f = VR_f / sigma^2_leaf``
+  (the scale-free signal strength of a candidate split; ~``c·log(F·C)/n``
+  on pure noise from the max-over-candidates selection effect, a
+  constant on real structure).  At every look the process bets the fresh
+  mass ``dn`` absorbed since the previous look against a
+  selection-corrected null mean:
+
+      log E_f  +=  dn * ( lam * (eta_f - mu0(n))  -  lam^2 / 8 )
+
+  the Hoeffding-supermartingale increment for ``dn`` bounded
+  observations (Ville's inequality then bounds the crossing probability
+  of ``E >= 1/alpha`` under the null by ``alpha``, *uniformly over
+  looks* — peeking every batch costs nothing).  A leaf splits on its
+  merit champion ``f* = argmax_f VR_f`` once ``log E_{f*}`` crosses
+  ``log(1/alpha)``.  There is NO tie-break clause: near-equal genuinely
+  good features both accumulate evidence and the champion crosses —
+  the ratio test's stall (and its noise-splitting ``eps < tau`` escape
+  hatch, a guaranteed false split on any long noise stream) does not
+  exist in this geometry.
+
+The e-process state rides the TreeState pytree as two ordinary leaves —
+``dec_logE`` (M, F) and ``dec_n_last`` (M,) — so it vmaps over the
+forest's tree axis, shards under ``forest_state_specs``, round-trips
+through the checkpointer, and stays replicated under the §4.1
+data-parallel protocol for free (attempts — and therefore every decision
+-state update — only execute on merged statistics at sync boundaries,
+identically on every shard).  Both backends carry the same leaves
+(inert zeros under ``"hoeffding"``), so the backend knob never changes
+the state treedef and cannot fragment any shape-keyed jit cache.
+
+Shared by both backends: merit sanitization (NaN -> -inf, random-subspace
+feature masking) and the degenerate-leaf guard — a leaf whose merit row
+has fewer than two finite entries must not pass the *ratio* test (with a
+single candidate the runner-up merit is -inf, the ratio collapses to 0
+and any positive merit "wins" unopposed); the per-feature e-process
+needs no such guard, since it never compares features.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import stats
+
+__all__ = ["DECISION_BACKENDS", "decision_state", "DECISION_KEYS",
+           "sanitize_merit", "decide", "E_LAMBDA", "E_SEL", "E_MARGIN"]
+
+DECISION_BACKENDS = ("hoeffding", "anytime")
+
+#: names of the decision-state leaves every TreeState carries
+DECISION_KEYS = ("dec_logE", "dec_n_last")
+
+# e-process constants (module-level, not config: they parameterize the
+# supermartingale construction, not the user-facing risk contract)
+E_LAMBDA = 0.3   # betting fraction lam in (0, 1]: larger = faster
+#                  accumulation on strong signal but a larger -lam^2/8
+#                  drag that starves weak-signal leaves (the
+#                  benchmarks/false_splits.py sweep picked this point)
+E_SEL = 2.0      # selection-correction multiplier: the null mean of
+#                  eta = max-over-(F*C)-candidates VR / sigma^2 scales
+#                  like log(F*C)/n on noise; E_SEL covers its tail
+E_MARGIN = 0.01  # practical-null floor on eta: variance fractions below
+#                  this are never worth a split, whatever n says
+
+
+def decision_state(M: int, F: int) -> dict:
+    """Fresh decision-stage leaves for an (M-node, F-feature) tree.
+
+    ``dec_logE``   (M, F) f32 — running log e-value per (leaf, feature)
+                   (0 = no evidence; floored at 0, see :func:`decide`);
+    ``dec_n_last`` (M,) f32  — leaf weight mass at the leaf's previous
+                   look (so the next look bets only the FRESH mass).
+    Both stay identically zero under the Hoeffding backend.
+    """
+    return {"dec_logE": jnp.zeros((M, F), jnp.float32),
+            "dec_n_last": jnp.zeros((M,), jnp.float32)}
+
+
+def sanitize_merit(merit, feat_mask=None):
+    """NaN merits -> -inf; features outside the subspace mask -> -inf.
+
+    The query reports -inf for masked/non-attempting tables already, but
+    a NaN can escape degenerate table arithmetic — and a NaN poisons
+    ``top_k``/``argmax`` ordering, so the decision stage normalizes
+    before ANY backend looks at the table.
+    """
+    merit = jnp.where(jnp.isnan(merit), -jnp.inf, merit)
+    if feat_mask is not None:
+        merit = jnp.where(feat_mask[None, :], merit, -jnp.inf)
+    return merit
+
+
+def _hoeffding_want(cfg, state, merit, attempt):
+    """The pre-factoring FIMT ratio test, op-for-op (bit-identity pin),
+    plus the degenerate-leaf guard.  Returns (want, {}) — the Hoeffding
+    backend carries no decision state."""
+    top2 = jax.lax.top_k(merit, 2)[0]                       # (M, 2)
+    vr1, vr2 = top2[:, 0], top2[:, 1]
+    n_leaf = jnp.maximum(state["ystats"]["n"], 1.0)
+    eps = jnp.sqrt(jnp.log(1.0 / cfg.delta) / (2.0 * n_leaf))
+    ratio = jnp.where(vr1 > 0, jnp.maximum(vr2, 0.0) / vr1, 1.0)
+    decide_ = (ratio < 1.0 - eps) | (eps < cfg.tau)
+    # degenerate-leaf guard: the ratio test compares champion vs
+    # runner-up, so it is only meaningful when at least two features
+    # offer a real (finite-merit) candidate — with one, ratio == 0 and
+    # any positive merit splits unopposed (tests/test_decide.py pins the
+    # failure this prevents)
+    n_finite = jnp.sum(jnp.isfinite(merit), axis=1)
+    want = attempt & decide_ & jnp.isfinite(vr1) & (vr1 > 0) \
+        & (n_finite >= 2)
+    return want, {}
+
+
+def _anytime_want(cfg, state, merit, attempt):
+    """Per-(leaf, feature) e-process update + threshold crossing.
+
+    One look = one call with ``attempt`` marking the looking leaves; the
+    e-process leaves of every non-attempting leaf are untouched (their
+    fresh mass keeps accruing and is bet at their next look).  Returns
+    (want, updated decision leaves).
+    """
+    M, F = merit.shape
+    finite = jnp.isfinite(merit)
+    n_leaf = state["ystats"]["n"]                            # (M,)
+    sigma2 = jnp.maximum(stats.variance(state["ystats"]), 1e-12)
+    eta = jnp.clip(jnp.where(finite, merit, 0.0) / sigma2[:, None],
+                   0.0, 1.0)                                 # (M, F)
+    # selection-corrected null mean: on pure noise the best of ~F*C
+    # candidate boundaries explains ~log(F*C)/n of the variance by
+    # overfitting alone; real structure keeps eta bounded away from 0
+    safe_n = jnp.maximum(n_leaf, 1.0)
+    mu0 = E_MARGIN + E_SEL * jnp.log(float(max(cfg.n_features, 2)
+                                           * cfg.n_bins)) / safe_n
+    dn = jnp.maximum(n_leaf - state["dec_n_last"], 0.0)      # fresh mass
+    inc = dn[:, None] * (E_LAMBDA * (eta - mu0[:, None])
+                         - E_LAMBDA * E_LAMBDA / 8.0)
+    # floor at 0: a feature whose evidence collapses restarts its bet
+    # instead of digging an unbounded hole (the standard restart trick;
+    # the harness pins the realized alpha empirically)
+    logE = jnp.maximum(state["dec_logE"] + jnp.where(finite, inc, 0.0),
+                       0.0)
+    look = attempt[:, None]
+    logE = jnp.where(look, logE, state["dec_logE"])
+    n_last = jnp.where(attempt, n_leaf, state["dec_n_last"])
+
+    best_f = jnp.argmax(merit, axis=1)                       # (M,)
+    vr1 = jnp.take_along_axis(merit, best_f[:, None], 1)[:, 0]
+    crossed = jnp.take_along_axis(logE, best_f[:, None], 1)[:, 0] \
+        >= jnp.log(1.0 / cfg.alpha)
+    want = attempt & crossed & jnp.isfinite(vr1) & (vr1 > 0)
+    return want, {"dec_logE": logE, "dec_n_last": n_last}
+
+
+def decide(cfg, state, merit, attempt, feat_mask=None):
+    """Which attempting leaves split, on which feature — one batched call.
+
+    cfg: :class:`repro.core.hoeffding.HTRConfig` (``decision_backend``
+    selects the test); state: the TreeState (reads ``ystats`` and the
+    ``dec_*`` leaves); merit: (M, F) from
+    :func:`repro.kernels.ops.forest_best_splits` (-inf = no candidate);
+    attempt: (M,) bool look mask; feat_mask: optional (F,) bool
+    random-subspace mask.
+
+    Returns ``(want, best_f, dec_new)``: (M,) bool split decisions, the
+    (M,) i32 merit champion per leaf, and the dict of updated decision
+    -state leaves (empty under ``"hoeffding"``) for the caller to fold
+    into the new state.  Decisions depend only on attempting rows'
+    merits, so the compacted and full-scan query paths produce bitwise
+    identical outcomes (tests/test_decide.py).
+    """
+    merit = sanitize_merit(merit, feat_mask)
+    best_f = jnp.argmax(merit, axis=1)
+    if cfg.decision_backend == "hoeffding":
+        want, dec_new = _hoeffding_want(cfg, state, merit, attempt)
+    else:
+        assert cfg.decision_backend == "anytime", cfg.decision_backend
+        want, dec_new = _anytime_want(cfg, state, merit, attempt)
+    return want, best_f, dec_new

@@ -25,10 +25,13 @@ hot path is three explicit stages (DESIGN.md §2.3):
 the compiled kernels on TPU and the fused-jnp lowering elsewhere;
 ``"oracle"`` keeps the original per-stat segment-scatter + per-table scan
 path as the correctness reference (benchmarks/tree.py times both head to
-head).  Growth follows FIRT/FIMT: a leaf splits when the ratio of the
+head).  Growth follows FIRT/FIMT: under the default
+``decision_backend="hoeffding"`` a leaf splits when the ratio of the
 second-best to best Variance Reduction drops below ``1 - eps`` with
 ``eps = sqrt(ln(1/delta) / (2 n))`` (Hoeffding bound, R = 1 for the ratio),
-or when ``eps < tau`` (tie break).
+or when ``eps < tau`` (tie break); ``decision_backend="anytime"`` swaps in
+:mod:`repro.core.decide`'s e-process test, which stays valid under the
+continuous peeking the ``eager`` schedule does (DESIGN.md §2.7).
 
 Functional API: ``init_state`` -> ``update`` (learn a batch) -> ``predict``;
 ``update_stream`` scans a whole stream through ``update`` in one dispatch.
@@ -46,6 +49,7 @@ from typing import Dict, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import decide as dc
 from repro.core import stats
 from repro.kernels import ops as kops
 from repro.kernels import ref as kref
@@ -78,6 +82,11 @@ class HTRConfig:
     attempt_schedule: str = "grace"   # grace | eager
     compact_query: bool = True    # K-compacted split query (§2.5); False
     #                               forces the full M-table scan reference
+    # split-decision test (DESIGN.md §2.7): "hoeffding" is the classic
+    # fixed-n ratio test above; "anytime" is core/decide.py's e-process,
+    # valid at every look — the right pairing for attempt_schedule="eager"
+    decision_backend: str = "hoeffding"   # hoeffding | anytime
+    alpha: float = 0.05           # anytime-valid false-split level
 
     def __post_init__(self):
         if self.attempt_schedule not in ("grace", "eager"):
@@ -85,6 +94,12 @@ class HTRConfig:
                 f"attempt_schedule={self.attempt_schedule!r}: expected "
                 f"'grace' (re-attempt after grace_period new mass) or "
                 f"'eager' (every mature leaf attempts every batch)")
+        if self.decision_backend not in dc.DECISION_BACKENDS:
+            raise ValueError(
+                f"decision_backend={self.decision_backend!r}: expected "
+                f"one of {dc.DECISION_BACKENDS}")
+        if not 0.0 < self.alpha < 1.0:
+            raise ValueError(f"alpha={self.alpha}: expected 0 < alpha < 1")
 
 
 def init_state(cfg: HTRConfig) -> TreeState:
@@ -109,10 +124,17 @@ def init_state(cfg: HTRConfig) -> TreeState:
     ``seen_since_attempt``  (M,) f32  weight mass since the last split
                                   attempt (the grace-period counter: reset
                                   on every attempt, successful or not)
+    ``dec_logE``   (M, F) f32     running log e-value per (leaf, feature)
+                                  (:mod:`repro.core.decide`; zeros under
+                                  the Hoeffding backend)
+    ``dec_n_last`` (M,) f32       leaf mass at the previous decision look
     ``n_nodes``    () i32         allocated node count
     =============  =============  ================================================
 
     with ``M = cfg.max_nodes``, ``F = cfg.n_features``, ``C = cfg.n_bins``.
+    The ``dec_*`` decision-stage leaves are present under BOTH decision
+    backends (inert zeros under ``"hoeffding"``) so the treedef — and
+    every shape-keyed jit cache — is independent of ``decision_backend``.
     """
     M, F, C = cfg.max_nodes, cfg.n_features, cfg.n_bins
     return {
@@ -127,6 +149,7 @@ def init_state(cfg: HTRConfig) -> TreeState:
         "ao_radius": jnp.full((M, F), cfg.r0, jnp.float32),
         "ao_origin": jnp.zeros((M, F), jnp.float32),
         "seen_since_attempt": jnp.zeros((M,), jnp.float32),
+        **dc.decision_state(M, F),
         "n_nodes": jnp.int32(1),
     }
 
@@ -230,27 +253,23 @@ def _query_oracle(state: TreeState, attempt) -> Tuple[jax.Array, jax.Array]:
 
 def _split_decision(cfg: HTRConfig, state: TreeState, merit, thr_all, attempt,
                     feat_mask=None):
-    """Hoeffding-bound ratio test + vectorized child allocation.
+    """Decision stage + vectorized child allocation.
 
-    Shared by both attempt engines so the decision math can never
-    desynchronize between the kernel pipeline and the oracle reference.
-    ``feat_mask``: optional (F,) bool random-subspace mask — features
-    outside it can never win a split (their merit is forced to -inf).
-    Returns (best_f, best_c, can, lidx, c0, c1, c0i, c1i); index M means
-    'dropped scatter'.
+    The statistical test itself lives in :func:`repro.core.decide.decide`
+    (selected by ``cfg.decision_backend``); this wrapper adds the
+    threshold gather and the child-slot allocation, and is shared by both
+    attempt engines so the decision math can never desynchronize between
+    the kernel pipeline and the oracle reference.  ``feat_mask``:
+    optional (F,) bool random-subspace mask — features outside it can
+    never win a split.  Returns
+    (best_f, best_c, can, lidx, c0, c1, c0i, c1i, dec_new); index M
+    means 'dropped scatter'; ``dec_new`` is the dict of updated
+    decision-state leaves for the caller to fold into the new state
+    (empty under the Hoeffding backend).
     """
     M = cfg.max_nodes
-    if feat_mask is not None:
-        merit = jnp.where(feat_mask[None, :], merit, -jnp.inf)
-    top2 = jax.lax.top_k(merit, 2)[0]                       # (M, 2)
-    best_f = jnp.argmax(merit, axis=1)                      # (M,)
+    want, best_f, dec_new = dc.decide(cfg, state, merit, attempt, feat_mask)
     best_c = thr_all[jnp.arange(M), best_f]
-    vr1, vr2 = top2[:, 0], top2[:, 1]
-    n_leaf = jnp.maximum(state["ystats"]["n"], 1.0)
-    eps = jnp.sqrt(jnp.log(1.0 / cfg.delta) / (2.0 * n_leaf))
-    ratio = jnp.where(vr1 > 0, jnp.maximum(vr2, 0.0) / vr1, 1.0)
-    decide = (ratio < 1.0 - eps) | (eps < cfg.tau)
-    want = attempt & decide & jnp.isfinite(vr1) & (vr1 > 0)
 
     # vectorized allocation of 2 children per splitting leaf
     k = jnp.cumsum(want.astype(jnp.int32)) - 1
@@ -260,7 +279,7 @@ def _split_decision(cfg: HTRConfig, state: TreeState, merit, thr_all, attempt,
     c0, c1 = base, base + 1
     c0i = jnp.where(can, c0, M)
     c1i = jnp.where(can, c1, M)
-    return best_f, best_c, can, lidx, c0, c1, c0i, c1i
+    return best_f, best_c, can, lidx, c0, c1, c0i, c1i, dec_new
 
 
 def _child_radius(cfg: HTRConfig, state: TreeState):
@@ -285,10 +304,10 @@ def _do_attempts_oracle(cfg: HTRConfig, state: TreeState, attempt,
     benchmarks/tree.py races it against :func:`_do_attempts`."""
     M = cfg.max_nodes
     merit, thr_all = _query_oracle(state, attempt)
-    best_f, best_c, can, lidx, c0, c1, c0i, c1i = _split_decision(
+    best_f, best_c, can, lidx, c0, c1, c0i, c1i, dec_new = _split_decision(
         cfg, state, merit, thr_all, attempt, feat_mask)
 
-    st = dict(state)
+    st = dict(state, **dec_new)
     st["feature"] = st["feature"].at[lidx].set(best_f, mode="drop")
     st["threshold"] = st["threshold"].at[lidx].set(best_c, mode="drop")
     st["child"] = st["child"].at[lidx, 0].set(c0, mode="drop")
@@ -304,6 +323,10 @@ def _do_attempts_oracle(cfg: HTRConfig, state: TreeState, attempt,
         st["child"] = st["child"].at[ci].set(-1, mode="drop")
         st["seen_since_attempt"] = \
             st["seen_since_attempt"].at[ci].set(0.0, mode="drop")
+    # fresh e-processes for the children; the split parent's are retired
+    for di in (lidx, c0i, c1i):
+        st["dec_logE"] = st["dec_logE"].at[di].set(0.0, mode="drop")
+        st["dec_n_last"] = st["dec_n_last"].at[di].set(0.0, mode="drop")
 
     idxM = jnp.arange(M)
     bins_f = jax.tree.map(lambda a: a[idxM, best_f], state["ao_y"])
@@ -343,11 +366,11 @@ def _apply_splits(cfg: HTRConfig, state: TreeState, merit, thr_all, attempt,
     all T*M tables and vmap only this cheap per-tree apply (DESIGN.md §5).
     """
     M = cfg.max_nodes
-    best_f, best_c, can, lidx, c0, c1, c0i, c1i = _split_decision(
+    best_f, best_c, can, lidx, c0, c1, c0i, c1i, dec_new = _split_decision(
         cfg, state, merit, thr_all, attempt, feat_mask)
     kids = jnp.concatenate([c0i, c1i])             # (2M,) fused child scatter
 
-    st = dict(state)
+    st = dict(state, **dec_new)
     st["feature"] = st["feature"].at[lidx].set(best_f, mode="drop")
     st["threshold"] = st["threshold"].at[lidx].set(best_c, mode="drop")
     st["child"] = st["child"].at[lidx].set(jnp.stack([c0, c1], 1), mode="drop")
@@ -358,6 +381,10 @@ def _apply_splits(cfg: HTRConfig, state: TreeState, merit, thr_all, attempt,
         jnp.concatenate([lidx, kids])].set(0.0, mode="drop")
     st["depth"] = st["depth"].at[kids].set(jnp.tile(state["depth"] + 1, 2),
                                            mode="drop")
+    # fresh e-processes for the children; the split parent's are retired
+    touched = jnp.concatenate([lidx, kids])
+    st["dec_logE"] = st["dec_logE"].at[touched].set(0.0, mode="drop")
+    st["dec_n_last"] = st["dec_n_last"].at[touched].set(0.0, mode="drop")
 
     # children INHERIT the split halves' target statistics, recovered from
     # the winning feature's QO bins with the paper's grouped two-pass form

@@ -1,0 +1,88 @@
+"""Regenerate tests/goldens/decide_goldens.npz — the pre-PR-7 bit-identity pin.
+
+Trains a deterministic single tree, a forest, a data-parallel reference
+forest and a frozen snapshot with the DEFAULT (Hoeffding) decision
+backend and saves every topology/predictor array.  tests/test_decide.py
+asserts the default backend still reproduces these arrays bitwise, so
+the decision-stage refactor (core/decide.py) can never silently change
+the trees it ships.
+
+Run from the repo root: ``PYTHONPATH=src python tools/make_decide_goldens.py``
+Only regenerate when an INTENTIONAL behavior change is being made (and
+say so in the commit).
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import forest as fr
+from repro.core import hoeffding as ht
+from repro.core import serve
+from repro.data import synth
+from repro.train import sharding
+
+OUT = os.path.join(os.path.dirname(__file__), os.pardir,
+                   "tests", "goldens", "decide_goldens.npz")
+
+GOLDEN_KEYS = ("feature", "threshold", "child", "is_leaf", "depth",
+               "n_nodes", "seen_since_attempt")
+
+
+def tree_cfg(**kw):
+    base = dict(n_features=3, max_nodes=31, n_bins=32, grace_period=200,
+                max_depth=6, r0=0.3, split_backend="jnp")
+    base.update(kw)
+    return ht.HTRConfig(**base)
+
+
+def collect(prefix, trees, out):
+    for k in GOLDEN_KEYS:
+        out[f"{prefix}_{k}"] = np.asarray(trees[k])
+    out[f"{prefix}_leaf_mean"] = np.asarray(trees["ystats"]["mean"])
+    out[f"{prefix}_leaf_n"] = np.asarray(trees["ystats"]["n"])
+
+
+def main():
+    out = {}
+    X, y = synth.piecewise_regression(6000, n_features=3, seed=9)
+    X, y = jnp.array(X), jnp.array(y)
+
+    # --- single tree, grace + eager schedules ----------------------------
+    for sched in ("grace", "eager"):
+        cfg = tree_cfg(attempt_schedule=sched)
+        s = ht.update_stream(cfg, ht.init_state(cfg), X, y, batch_size=256)
+        collect(f"tree_{sched}", s, out)
+
+    # --- forest ----------------------------------------------------------
+    fcfg = fr.ForestConfig(tree=tree_cfg(max_nodes=15, max_depth=4),
+                           n_trees=4, subspace=0.99)
+    fstate, _ = fr.update_stream(fcfg, fr.init_forest(
+        fcfg, jax.random.PRNGKey(3)), X[:3000], y[:3000], batch_size=256)
+    collect("forest", fstate["trees"], out)
+    out["forest_vote_w"] = np.asarray(fstate["vote_w"])
+
+    # --- data-parallel reference (2 shards, sync_every=2) ----------------
+    dp = sharding.build_data_parallel_reference(fcfg, n_shards=2,
+                                                sync_every=2)
+    dst = dp.init(jax.random.PRNGKey(5))
+    for i in range(8):
+        dst, _ = dp.update(dst, X[i * 256:(i + 1) * 256],
+                           y[i * 256:(i + 1) * 256])
+    collect("dp", dst["forest"]["trees"], out)
+
+    # --- frozen snapshot of the forest -----------------------------------
+    snap = serve.freeze(fstate, version=1, step=11)
+    for k in ("feature", "threshold", "child", "is_leaf", "leaf_mean",
+              "vote_w"):
+        out[f"snap_{k}"] = np.asarray(getattr(snap, k))
+    out["snap_depth"] = np.asarray(snap.depth)
+
+    os.makedirs(os.path.dirname(OUT), exist_ok=True)
+    np.savez_compressed(OUT, **out)
+    print(f"wrote {os.path.normpath(OUT)} ({len(out)} arrays)")
+
+
+if __name__ == "__main__":
+    main()

@@ -20,6 +20,16 @@ kinds of check:
   anytime drift-suite prequential MSE must stay within
   ``false_splits.MAX_MSE_RATIO`` of the Hoeffding backend's.
 
+* **roofline floors** — the analytic achieved-vs-attainable fraction
+  from :mod:`benchmarks.roofline` must stay above a per-family floor for
+  ``forest_update`` and ``forest_route``.  Both the attainable bound
+  (device peaks) and the measured time come from the SAME run, so the
+  fraction is machine- and load-independent where a wall-time band is
+  not: a loaded runner slows the peak probes and the kernels together.
+  The floors sit ~5x under the healthy fractions measured at commit
+  time — they trip on order-of-magnitude dispatch breakage (eager
+  fallback, per-call retraces), not on host variance.
+
 * **structural ratios** — machine-independent, measured inside ONE run:
 
   - at small attempt fractions (K/M <= 1/8) on forests of
@@ -56,21 +66,29 @@ import os
 import sys
 
 from benchmarks import engine as engine_bench
-from benchmarks import false_splits, kernels, query_sweep, serve
+from benchmarks import (false_splits, kernels, query_sweep, roofline,
+                        serve)
 from benchmarks.bench_io import REPO_ROOT, write_bench
 
 BASELINES = ("BENCH_kernels.json", "BENCH_query.json", "BENCH_serve.json",
-             "BENCH_engine.json", "BENCH_splits.json")
+             "BENCH_engine.json", "BENCH_splits.json",
+             "BENCH_roofline.json")
 FRESH_ARTIFACT = "BENCH_query.fresh.json"
 SERVE_FRESH_ARTIFACT = "BENCH_serve.fresh.json"
 ENGINE_FRESH_ARTIFACT = "BENCH_engine.fresh.json"
 SPLITS_FRESH_ARTIFACT = "BENCH_splits.fresh.json"
+ROOFLINE_FRESH_ARTIFACT = "BENCH_roofline.fresh.json"
 TOLERANCE = 3.0
 MIN_SPEEDUP = 1.5          # compacted vs full scan, same run, K/M <= 1/8
 MIN_SERVE_SPEEDUP = 1.0    # fused forest predict vs same-run per-tree vmap
 MIN_ENGINE_FRAC = 0.8      # engine throughput vs same-run bare snapshot
 SMALL_FRACTIONS = ("1/64", "1/8")
 MIN_GATED_M = 128          # the acceptance-criterion scale (M = 255)
+# achieved-vs-roofline floors (machine-independent: both sides of the
+# fraction are measured in the same run).  Healthy commit-time values on
+# the dev container: forest_update ~0.05, forest_route ~0.25 — the
+# floors sit ~5x below, so they catch dispatch breakage, never load.
+MIN_ROOFLINE_FRAC = {"forest_update": 0.01, "forest_route": 0.05}
 
 
 def _committed():
@@ -106,9 +124,31 @@ def _best_of(run_report, to_rows, reps=2):
     return [(name,) + best[name] for name in order], reports
 
 
-def main() -> int:
+def main(argv=None) -> int:
+    argv = sys.argv[1:] if argv is None else argv
     committed = _committed()
 
+    if "--profile" in argv:
+        # harvest per-op compiled costs + a BOUNDED trace (one dispatch
+        # per family) — the CI profile artifacts (profile_trace/,
+        # BENCH_profile.fresh.json).  Never trace the bench runs
+        # themselves: the profiler buffers every event in host memory
+        # and minutes of tuner-race dispatches are an OOM, not a trace.
+        from repro.kernels import ops as kops
+        from repro.perf import profile as pprof
+        from repro.perf.tune import make_workloads
+        w = make_workloads()
+        backend = kops.resolve_backend(None)
+        costs = pprof.profile_ops({
+            "forest_update": (
+                lambda *a: kops.forest_update(*a, backend=backend),
+                w["update"]),
+            "forest_route": (
+                lambda *a: kops.forest_route(*a, depth=w["depth"],
+                                             backend=backend), w["route"]),
+        }, logdir=os.path.join(REPO_ROOT, "profile_trace"))
+        pprof.write_report(costs, os.path.join(REPO_ROOT,
+                                               "BENCH_profile.fresh.json"))
     fresh, _ = _best_of(kernels.run, kernels.to_rows)
     qrows, qreports = _best_of(query_sweep.run, query_sweep.to_rows)
     fresh.extend(qrows)
@@ -119,6 +159,9 @@ def main() -> int:
     erows, ereports = _best_of(engine_bench.run, engine_bench.to_rows)
     fresh.extend(erows)
     write_bench(ENGINE_FRESH_ARTIFACT, erows)
+    rrows, rreports = _best_of(roofline.run, roofline.to_rows)
+    fresh.extend(rrows)
+    write_bench(ROOFLINE_FRESH_ARTIFACT, rrows)
     # fixed-seed statistical suite: deterministic, one rep is exact
     fsreport = false_splits.run()
     fsrows = false_splits.to_rows(fsreport)
@@ -186,6 +229,19 @@ def main() -> int:
             f"engine_serve_once: only {frac:.2f}x the same-run bare "
             f"predict_snapshot throughput (structural floor "
             f"{MIN_ENGINE_FRAC}x)")
+
+    # roofline floors: achieved-vs-attainable fraction, both sides from
+    # the same run — load-independent, unlike the wall-time band above
+    print(f"\n{'roofline gate':<42} {'achieved frac':>22}  verdict")
+    for fam, floor in MIN_ROOFLINE_FRAC.items():
+        frac = max(rep["ops"][fam]["achieved_frac"] for rep in rreports)
+        ok = frac >= floor
+        print(f"{'roofline_' + fam:<42} {frac:>21.4f}x  "
+              f"{'ok' if ok else 'REGRESSION'} (floor {floor})")
+        if not ok:
+            failures.append(
+                f"roofline_{fam}: achieved only {frac:.4f} of the "
+                f"same-run attainable bound (floor {floor})")
 
     # split-decision statistical gates (fixed seeds — exact, not timing):
     # anytime ≤ α on noise, hoeffding > α (the §2.7 premise), drift MSE

@@ -106,11 +106,54 @@ def _forest(report, rng):
         }
 
 
+def _tuned_dispatch(report, rng):
+    """Autotuned vs hard-coded dispatch, same-run interleaved race.
+
+    Runs the real tuner (full SEARCH_SPACE grid, measured best-of) for
+    the forest_update and forest_route families on a ragged B=1300
+    workload — the regime where the dispatch-shaping knobs (batch
+    ladder, ply rounding) matter — then races winner vs defaults
+    interleaved.  Bit-identity of every candidate is asserted inside
+    ``tune_family`` itself, so a recorded speedup can never come from a
+    schedule that changed results.
+    """
+    from repro.perf import tune as ptune
+
+    shapes = dict(M=256, F=8, C=16, T=8, B=1300)
+    w = ptune.make_workloads(**shapes)
+    for family in ("forest_update", "forest_route"):
+        key, entry = ptune.tune_family(family, "jnp", shapes=shapes, reps=4)
+        tuned = dict(entry["params"])
+        tkey = (family, "jnp", w["shape_class"][family])
+        run_op = ptune._runner(family, w, "jnp")
+        best = {"tuned": float("inf"), "default": float("inf")}
+        for params, label in ((tuned, "tuned"), ({}, "default")):
+            with ptune._only_tuning({tkey: params} if params else {}):
+                jax.block_until_ready(run_op())           # warm both
+        for _ in range(9):                                # interleaved race
+            for params, label in ((tuned, "tuned"), ({}, "default")):
+                with ptune._only_tuning({tkey: params} if params else {}):
+                    t0 = time.perf_counter()
+                    jax.block_until_ready(run_op())
+                    best[label] = min(best[label],
+                                      (time.perf_counter() - t0) * 1e6)
+        report[f"tuned_dispatch_{family}"] = {
+            "tuned_us": best["tuned"],
+            "default_us": best["default"],
+            "speedup_tuned_vs_default": best["default"] / best["tuned"],
+            "params": tuned,
+            "cache_key": key,
+            "bit_identical": True,        # enforced by tune_family
+        }
+    ops.clear_jit_caches()
+
+
 def run(out=None):
     rng = np.random.default_rng(0)
     report = {}
     _single_table(report, rng)
     _forest(report, rng)
+    _tuned_dispatch(report, rng)
     return report
 
 
@@ -118,6 +161,15 @@ def to_rows(report):
     """BENCH_kernels.json rows (name, us_per_call, derived) — shared by
     benchmarks.run and benchmarks.check_regression so the regression gate
     diffs exactly the rows the trajectory artifact commits."""
-    return [(f"kernel_{name}", k["observe_ns_per_elem"] / 1e3,
-             f"query_us={k['query_us']:.1f}")
-            for name, k in report.items()]
+    rows = []
+    for name, k in report.items():
+        if name.startswith("tuned_dispatch_"):
+            rows.append((f"kernel_{name}", k["tuned_us"],
+                         f"speedup_tuned_vs_default="
+                         f"{k['speedup_tuned_vs_default']:.3f}"
+                         f" default_us={k['default_us']:.1f}"
+                         f" params={k['params']}"))
+        else:
+            rows.append((f"kernel_{name}", k["observe_ns_per_elem"] / 1e3,
+                         f"query_us={k['query_us']:.1f}"))
+    return rows

@@ -2,14 +2,20 @@
 
 One section per paper table/figure + the system-level benches.
 Prints ``name,us_per_call,derived`` CSV rows (harness contract) and dumps
-the full JSON report to benchmarks/report.json.
+the full JSON report to benchmarks/report.json (a run artifact,
+gitignored — the committed trajectory lives in the BENCH_*.json files).
+
+``--only SECTION [SECTION...]`` runs a subset (see ``SECTIONS``);
+``--profile`` captures a bounded ``jax.profiler`` trace (one dispatch
+per kernel family, written to ``profile_trace/`` at the repo root) and
+harvests per-op compiled flops/bytes into ``BENCH_profile.fresh.json``
+— both gitignored CI artifacts, see docs/benchmarks.md §How to profile.
 """
 from __future__ import annotations
 
 import argparse
 import json
 import os
-import sys
 
 import jax.numpy as jnp
 
@@ -19,42 +25,31 @@ L.set_compute_dtype(jnp.float32)  # CPU container cannot execute bf16 dots
 
 from benchmarks import (aos, dp, engine, false_splits, forest,  # noqa: E402
                         kernels, query_sweep, roofline, serve, tree)
-from benchmarks.bench_io import write_bench as _write_bench  # noqa: E402
+from benchmarks.bench_io import REPO_ROOT, write_bench  # noqa: E402
 
 
-def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--full", action="store_true",
-                    help="full paper grid (sizes to 50k, 10 seeds)")
-    ap.add_argument("--skip-aos", action="store_true")
-    args = ap.parse_args()
+def _sec_aos(report, csv, args):
+    rep = aos.run(full=args.full)
+    report["aos"] = {k: v for k, v in rep.items() if k != "rows"}
+    report["aos_rows"] = rep["rows"]
+    by_ao = {}
+    for r in rep["rows"]:
+        by_ao.setdefault(r["ao"], []).append(r)
+    for ao_name, rows in sorted(by_ao.items()):
+        obs = sum(r["observe_s"] for r in rows) / len(rows)
+        qry = sum(r["query_s"] for r in rows) / len(rows)
+        merit = sum(r["merit"] for r in rows) / len(rows)
+        elems = sum(r["elements"] for r in rows) / len(rows)
+        csv.append((f"ao_observe_{ao_name}", obs * 1e6,
+                    f"elements={elems:.0f}"))
+        csv.append((f"ao_query_{ao_name}", qry * 1e6,
+                    f"merit={merit:.4f}"))
 
-    report = {}
-    csv = []
 
-    # --- paper Figs. 1-6: AO comparison grid -----------------------------
-    if not args.skip_aos:
-        rep = aos.run(full=args.full)
-        report["aos"] = {k: v for k, v in rep.items() if k != "rows"}
-        report["aos_rows"] = rep["rows"]
-        # emit averaged CSV per AO
-        by_ao = {}
-        for r in rep["rows"]:
-            by_ao.setdefault(r["ao"], []).append(r)
-        for ao_name, rows in sorted(by_ao.items()):
-            obs = sum(r["observe_s"] for r in rows) / len(rows)
-            qry = sum(r["query_s"] for r in rows) / len(rows)
-            merit = sum(r["merit"] for r in rows) / len(rows)
-            elems = sum(r["elements"] for r in rows) / len(rows)
-            csv.append((f"ao_observe_{ao_name}", obs * 1e6,
-                        f"elements={elems:.0f}"))
-            csv.append((f"ao_query_{ao_name}", qry * 1e6,
-                        f"merit={merit:.4f}"))
-
-    # --- tree-level e2e (paper §7 future work, implemented) --------------
+def _sec_tree(report, csv, args):
     trep = tree.run()
     report["tree"] = trep
-    tree_rows = [
+    rows = [
         ("hoeffding_tree_update", 1e6 / trep["kernel"]["instances_per_s"],
          f"mse_ratio={trep['kernel']['mse_ratio']:.4f}"
          f" speedup_vs_oracle={trep['kernel_speedup_vs_oracle']:.3f}"
@@ -63,14 +58,15 @@ def main() -> None:
          1e6 / trep["oracle"]["instances_per_s"],
          f"mse_ratio={trep['oracle']['mse_ratio']:.4f}"),
     ]
-    csv.extend(tree_rows)
-    _write_bench("BENCH_tree.json", tree_rows)
+    csv.extend(rows)
+    write_bench("BENCH_tree.json", rows)
 
-    # --- forest-level e2e: vmapped tree axis vs loop-over-trees ----------
+
+def _sec_forest(report, csv, args):
     frep = forest.run()
     report["forest"] = frep
     preq = frep["prequential"]
-    forest_rows = [
+    rows = [
         ("forest_update_vmapped",
          1e6 / frep["vmapped"]["instances_per_s"],
          f"T={frep['n_trees']}"
@@ -85,61 +81,133 @@ def main() -> None:
          f" beats_best_member={preq['forest_beats_best_member']}"
          f" drift_resets={preq['drift_resets']}"),
     ]
-    csv.extend(forest_rows)
-    _write_bench("BENCH_forest.json", forest_rows)
+    csv.extend(rows)
+    write_bench("BENCH_forest.json", rows)
 
-    # --- serving: fused routing + frozen snapshots (read path) ------------
+
+def _sec_serve(report, csv, args):
     srep = serve.run()
     report["serve"] = srep
-    serve_rows = serve.to_rows(srep)
-    csv.extend(serve_rows)
-    _write_bench("BENCH_serve.json", serve_rows)
+    rows = serve.to_rows(srep)
+    csv.extend(rows)
+    write_bench("BENCH_serve.json", rows)
 
-    # --- continuous-serving engine: admission overhead + open-loop load ---
+
+def _sec_engine(report, csv, args):
     erep = engine.run()
     report["engine"] = erep
-    engine_rows = engine.to_rows(erep)
-    csv.extend(engine_rows)
-    _write_bench("BENCH_engine.json", engine_rows)
+    rows = engine.to_rows(erep)
+    csv.extend(rows)
+    write_bench("BENCH_engine.json", rows)
 
-    # --- data-parallel stream scale-out (§4.1; own subprocess for the
-    # forced-host-device XLA flags) ----------------------------------------
+
+def _sec_dp(report, csv, args):
+    # own subprocess for the forced-host-device XLA flags (§4.1)
     drep = dp.run()
     report["dp"] = drep
-    dp_rows = dp.to_rows(drep)
-    csv.extend(dp_rows)
-    _write_bench("BENCH_dp.json", dp_rows)
+    rows = dp.to_rows(drep)
+    csv.extend(rows)
+    write_bench("BENCH_dp.json", rows)
 
-    # --- split-decision validity: false-split rates + drift MSE (§2.7) ----
+
+def _sec_splits(report, csv, args):
     fsrep = false_splits.run()
     report["false_splits"] = fsrep
-    fs_rows = false_splits.to_rows(fsrep)
-    csv.extend(fs_rows)
-    _write_bench("BENCH_splits.json", fs_rows)
+    rows = false_splits.to_rows(fsrep)
+    csv.extend(rows)
+    write_bench("BENCH_splits.json", rows)
 
-    # --- kernel micro-benches ---------------------------------------------
-    krep = kernels.run()
+
+def _profiled_kernels(report):
+    """Per-op compiled-cost harvest + a BOUNDED profiler trace (one
+    dispatch per family): the ``--profile`` artifacts (gitignored).
+    The trace deliberately does NOT wrap the bench run itself — the
+    profiler buffers every event in host memory, and minutes of
+    tuner-race dispatches are an OOM, not a trace."""
+    from repro.kernels import ops as kops
+    from repro.perf import profile as pprof
+    from repro.perf.tune import make_workloads
+
+    w = make_workloads()
+    backend = kops.resolve_backend(None)
+    named = {
+        "forest_update": (
+            lambda *a: kops.forest_update(*a, backend=backend), w["update"]),
+        "forest_best_splits": (
+            lambda *a: kops.forest_best_splits(*a, backend=backend),
+            w["query"]),
+        "forest_route": (
+            lambda *a: kops.forest_route(*a, depth=w["depth"],
+                                         backend=backend), w["route"]),
+        "forest_merge": (
+            lambda *a: kops.forest_merge(*a, backend=backend), w["merge"]),
+    }
+    costs = pprof.profile_ops(
+        named, logdir=os.path.join(REPO_ROOT, "profile_trace"))
+    report["profile"] = costs
+    pprof.write_report(costs, os.path.join(REPO_ROOT,
+                                           "BENCH_profile.fresh.json"))
+    return kernels.run()
+
+
+def _sec_kernels(report, csv, args):
+    krep = _profiled_kernels(report) if args.profile else kernels.run()
     report["kernels"] = krep
-    kernel_rows = kernels.to_rows(krep)
-    csv.extend(kernel_rows)
-    _write_bench("BENCH_kernels.json", kernel_rows)
+    rows = kernels.to_rows(krep)
+    csv.extend(rows)
+    write_bench("BENCH_kernels.json", rows)
 
-    # --- attempt-fraction query sweep: compacted vs full scan (§2.5) ------
+
+def _sec_query(report, csv, args):
     qrep = query_sweep.run()
     report["query_sweep"] = qrep
-    query_rows = query_sweep.to_rows(qrep)
-    csv.extend(query_rows)
-    _write_bench("BENCH_query.json", query_rows)
+    rows = query_sweep.to_rows(qrep)
+    csv.extend(rows)
+    write_bench("BENCH_query.json", rows)
 
-    # --- roofline summary from the dry-run ---------------------------------
-    try:
-        report["roofline_summary"] = roofline.summary()
-        s = report["roofline_summary"]
-        csv.append(("dryrun_cells_ok", s["cells_ok"],
-                    f"failed={s['cells_failed']}"))
-    except FileNotFoundError:
-        print("warning: dryrun_results.json missing; run repro.launch.dryrun",
-              file=sys.stderr)
+
+def _sec_roofline(report, csv, args):
+    rrep = roofline.run()
+    report["roofline"] = rrep
+    rows = roofline.to_rows(rrep)
+    csv.extend(rows)
+    write_bench("BENCH_roofline.json", rows)
+
+
+SECTIONS = {
+    "aos": _sec_aos,
+    "tree": _sec_tree,
+    "forest": _sec_forest,
+    "serve": _sec_serve,
+    "engine": _sec_engine,
+    "dp": _sec_dp,
+    "splits": _sec_splits,
+    "kernels": _sec_kernels,
+    "query": _sec_query,
+    "roofline": _sec_roofline,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="full paper grid (sizes to 50k, 10 seeds)")
+    ap.add_argument("--skip-aos", action="store_true")
+    ap.add_argument("--only", nargs="+", choices=sorted(SECTIONS),
+                    default=None, help="run only these sections")
+    ap.add_argument("--profile", action="store_true",
+                    help="bounded profiler trace (one dispatch per kernel "
+                         "family) + per-op compiled costs")
+    args = ap.parse_args()
+
+    names = args.only or list(SECTIONS)
+    if args.skip_aos and "aos" in names:
+        names.remove("aos")
+
+    report = {}
+    csv = []
+    for name in names:
+        SECTIONS[name](report, csv, args)
 
     out_path = os.path.join(os.path.dirname(__file__), "report.json")
     with open(out_path, "w") as f:

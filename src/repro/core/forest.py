@@ -249,15 +249,17 @@ def _vote_combine(yhat, wts, axis_name):
 @kops.register_jit_cache
 @functools.lru_cache(maxsize=None)
 def _jit_predict_live(backend: str, plies: int):
-    """Cached jit of the whole live read path for one (backend,
-    ply-bucket): serving a live forest dispatches ONE compiled program
+    """Keyed handle for the whole live read path of one (backend,
+    ply-bucket) — serving a live forest dispatches ONE compiled program
     per call instead of an eager epilogue.  The body IS the snapshot
     serving body (:func:`repro.core.serve._predict_impl` — route ->
-    gather -> vote), traced over the live state's full-capacity tables,
+    gather -> vote), traced over the live state's full-capacity tables
+    through the shared :func:`repro.kernels.ops._dispatch` factory (no
+    donation: the live state owns X's buffer lifetime, not this path),
     so the two read paths can never diverge."""
     from repro.core import serve as sv
-    return jax.jit(functools.partial(sv._predict_impl, plies=plies,
-                                     backend=backend, single=False))
+    return kops._dispatch(sv._predict_impl, plies=plies, backend=backend,
+                          single=False)
 
 
 def predict(cfg: ForestConfig, state: ForestState, X: jax.Array,
@@ -284,9 +286,13 @@ def predict(cfg: ForestConfig, state: ForestState, X: jax.Array,
     if (axis_name is None and backend != "oracle"
             and not kops._is_traced(trees["feature"], state["vote_w"], X)):
         depth = min(cfg.tree.max_depth, int(trees["depth"].max()))
-        X, B, padded = kops.pad_rows_pow2(X)
+        rbackend = kops.resolve_backend(backend)
+        T, M = trees["feature"].shape
+        p = kops.tuned("forest_route", rbackend,
+                       kops._shape_class_route(T, M, int(X.shape[1])))
+        X, B, padded = kops.pad_rows(X, 128, p["batch_ladder"])
         out = _jit_predict_live(
-            kops.resolve_backend(backend), kops.depth_bucket(depth))(
+            rbackend, kops.depth_bucket(depth, p["ply_round"]))(
             trees["feature"], trees["threshold"], trees["child"],
             trees["is_leaf"], trees["ystats"]["mean"], state["vote_w"], X)
         return out[:B] if padded else out

@@ -247,17 +247,17 @@ def _predict_impl(feature, threshold, child, is_leaf, leaf_mean, vote_w, X,
 @kops.register_jit_cache
 @functools.lru_cache(maxsize=None)
 def _jit_predict(backend: str, plies: int, single: bool):
-    """Cached jit of one (backend, ply-bucket) serving program.  The X
-    buffer is donated so XLA can reuse it for the sweep's node-state
-    temporaries; :func:`predict_snapshot` guarantees the donated buffer
-    is engine-owned (its pad copy, or an explicit device copy).
-    XLA:CPU cannot alias donated buffers (it would only warn per compile),
-    so donation engages on TPU only."""
-    donate = (6,) if jax.default_backend() == "tpu" else ()
-    return jax.jit(
-        functools.partial(_predict_impl, plies=plies, backend=backend,
-                          single=single),
-        donate_argnums=donate)
+    """Keyed handle for one (backend, ply-bucket) serving program (the
+    ``_cache_size()``/``cache_info()`` regression hook); delegates to
+    the shared :func:`repro.kernels.ops._dispatch` with ``donate_x`` —
+    the X buffer is donated so XLA can reuse it for the sweep's
+    node-state temporaries; :func:`predict_snapshot` guarantees the
+    donated buffer is engine-owned (its pad copy, or an explicit device
+    copy).  XLA:CPU cannot alias donated buffers (it would only warn per
+    compile), so donation engages on TPU only — the shared factory's
+    donation policy."""
+    return kops._dispatch(_predict_impl, donate_x=True, plies=plies,
+                          backend=backend, single=single)
 
 
 def predict_snapshot(snap: Snapshot, X, *,
@@ -266,13 +266,16 @@ def predict_snapshot(snap: Snapshot, X, *,
 
     Bit-identical to ``hoeffding.predict`` / ``forest.predict`` on the
     live state that was frozen, on every backend.  Concrete requests pad
-    to a power-of-two batch bucket and dispatch through donated cached
+    to their batch-ladder bucket and dispatch through donated cached
     jits keyed on (backend, realized-depth bucket) — a steady request
     stream never recompiles (``_jit_predict(...)._cache_size()`` is the
-    regression hook).  Only an engine-owned buffer is ever donated: the
-    padded copy when padding happened, else (TPU only) a defensive
-    device copy of X — the caller's array is never consumed out from
-    under a later reuse.  Under an enclosing trace the body inlines.
+    regression hook).  The ladder and ply rounding are the tuned
+    ``forest_route`` schedule knobs (the predict program IS a routing
+    sweep plus a gather), so one tuning entry steers route and serve
+    together.  Only an engine-owned buffer is ever donated: the padded
+    copy when padding happened, else (TPU only) a defensive device copy
+    of X — the caller's array is never consumed out from under a later
+    reuse.  Under an enclosing trace the body inlines.
     """
     backend = kops.resolve_backend(backend)
     X = jnp.asarray(X, jnp.float32)
@@ -281,16 +284,21 @@ def predict_snapshot(snap: Snapshot, X, *,
     if kops._is_traced(*tabs, X):
         return _predict_impl(*tabs, X, plies=snap.depth, backend=backend,
                              single=snap.single)
-    X, B, padded = kops.pad_rows_pow2(X)
+    T, Mr = snap.feature.shape
+    p = kops.tuned("forest_route", backend,
+                   kops._shape_class_route(T, Mr, int(X.shape[1])))
+    X, B, padded = kops.pad_rows(X, 128, p["batch_ladder"])
     if not padded and jax.default_backend() == "tpu":
         X = jnp.copy(X)     # donate our copy, not the caller's buffer
-    out = _jit_predict(backend, kops.depth_bucket(snap.depth),
+    out = _jit_predict(backend, kops.depth_bucket(snap.depth,
+                                                  p["ply_round"]),
                        snap.single)(*tabs, X)
     return out[:B] if padded else out
 
 
 def clear_jit_caches() -> None:
     """Drop the cached serving jits (test hook; resets ``_cache_size``).
-    Registered with :func:`repro.kernels.ops.clear_jit_caches` too, so
-    the shared hook resets the whole process."""
-    _jit_predict.cache_clear()
+    Delegates to the shared :func:`repro.kernels.ops.clear_jit_caches`
+    hook (this module's factory is registered there), so one call resets
+    the whole process."""
+    kops.clear_jit_caches()

@@ -4,7 +4,11 @@ Single-table ops (``qo_update`` / ``qo_best_split``) and the forest-scale
 ops the Hoeffding tree hot path dispatches through (``forest_update`` /
 ``forest_best_splits``).  Every op takes a ``backend``:
 
-* ``"pallas"``    — the compiled TPU kernel (the production path),
+* ``"pallas"``    — the compiled kernel: native on TPU, the Triton
+                    lowering on GPU, and the Pallas interpreter as the
+                    fallback everywhere else (so "pallas" is a legal,
+                    if slow, backend on any host — the smoke-test
+                    contract, not TPU-only in principle),
 * ``"interpret"`` — the same kernel body under Pallas' CPU interpreter
                     (correctness validation against :mod:`repro.kernels.ref`),
 * ``"jnp"``       — a fused pure-jnp lowering of the same math (XLA-fused
@@ -16,15 +20,40 @@ m2 + n*mean^2) rather than log-depth Chan merges — one fused ``cumsum``
 instead of hundreds of tiny ops; the kernels and the
 :mod:`repro.core.qo` oracle keep the fully robust merge (DESIGN.md §2.4).
 
-Dispatch discipline (DESIGN.md §2.5): both forest ops auto-detect whether
-they are being traced.  Called with *concrete* arrays they dispatch
-through cached jits keyed on (shape bucket, backend) — batch sizes round
-up to power-of-two buckets and the split query compacts to the smallest
-power-of-two bucket holding the K attempting tables, so the compile cache
-stays bounded and two same-bucket calls never retrace.  Called under an
-enclosing trace (e.g. inside ``jax.jit(hoeffding.update)``) they inline,
-so the caller's jit still fuses the whole stage; the query then selects
-its K bucket at *runtime* with ``lax.switch``.
+Dispatch discipline (DESIGN.md §2.5, §8): both forest ops auto-detect
+whether they are being traced.  Called with *concrete* arrays they
+dispatch through cached jits keyed on (shape bucket, backend) — batch
+sizes round up to bucket ladders and the split query compacts to the
+smallest power-of-two bucket holding the K attempting tables, so the
+compile cache stays bounded and two same-bucket calls never retrace.
+Called under an enclosing trace (e.g. inside ``jax.jit(hoeffding.update)``)
+they inline, so the caller's jit still fuses the whole stage; the query
+then selects its K bucket at *runtime* with ``lax.switch``.
+
+Every concrete dispatch flows through ONE shared helper pair —
+:func:`_dispatch` (the cached-jit factory: one lru keyed on
+(impl, statics), one donation policy, one clear hook) and
+:func:`dispatch_rows` (the pad-to-bucket → cached jit → slice prologue)
+— so the query, route, predict, update and merge families cannot drift
+apart in bucketing or caching discipline.  The per-family ``_jit_*``
+handles remain as thin keyed shims over :func:`_dispatch` (they are the
+``_cache_size()`` / ``cache_info()`` regression hooks).
+
+Tile/grid constants are *schedule* knobs, never semantics: pad rows
+vanish (w = 0 / leaf = -1 / attempt = False) and extra route plies
+self-loop, so every dispatch-shaping choice (ladders, ply rounding,
+query buckets, table-axis tiles) is bit-identical on every backend.
+The one exception is the batch-STREAMING tile width on the kernel path
+(forest_update ``tile_b``, qo_update ``tile``): it sets the granularity
+of a sequential Chan merge, so a different width reorders f32
+accumulation — same math, different bits — and the tuner therefore
+pins those knobs at their defaults off the jnp backend
+(``repro.perf.tune.KERNEL_STREAM_KNOBS``).  Defaults were eyeballed on
+one container, so
+:mod:`repro.perf.tune` can override them per (family, backend, shape
+class) through :func:`set_tuning` — a caller-supplied explicit value
+always wins, and with no tuning installed the defaults (and therefore
+the jit cache keys) are exactly the historical constants.
 """
 from __future__ import annotations
 
@@ -52,6 +81,7 @@ __all__ = [
     "forest_bin_ids", "forest_update", "forest_best_splits", "forest_merge",
     "route", "forest_route", "depth_bucket",
     "query_buckets", "clear_jit_caches", "QUERY_MIN_BUCKET",
+    "set_tuning", "get_tuning", "tuned", "DEFAULT_PARAMS",
 ]
 
 
@@ -69,6 +99,182 @@ def resolve_backend(backend: str | None) -> str:
     return backend
 
 
+def _kernel_interpret(backend: str) -> bool:
+    """Interpreter-mode flag for a kernel-path backend: ``"interpret"``
+    always interprets; ``"pallas"`` compiles natively on TPU and GPU
+    (Mosaic / Triton lowerings) and *falls back* to the interpreter on
+    hosts with neither — slow, but correct, so ``backend="pallas"`` is
+    smoke-testable everywhere (the multi-backend contract)."""
+    if backend == "interpret":
+        return True
+    return jax.default_backend() not in ("tpu", "gpu")
+
+
+# --------------------------------------------------------------------------
+# tuned dispatch parameters (DESIGN.md §8; populated by repro.perf.tune)
+# --------------------------------------------------------------------------
+
+#: The historical hard-coded schedule constants, per dispatch family.
+#: These are the fallbacks when no tuning entry matches — an untuned
+#: machine dispatches (and caches) exactly as before the perf layer
+#: existed — and the per-family search space in repro.perf.tune must
+#: stay a superset of them.
+DEFAULT_PARAMS = {
+    "qo_update": {"tile": 1024},
+    "forest_update": {"tile_b": 256, "tile_m": 128, "batch_ladder": "pow2"},
+    "forest_query": {"tile_m": 128, "min_bucket": 8},
+    "forest_route": {"tile_b": 256, "batch_ladder": "pow2", "ply_round": 2},
+    "forest_merge": {"tile_r": 256},
+}
+
+# (family, backend, shape_class) -> {param: value} overrides.  Kept
+# deliberately dumb (a dict the perf layer swaps in) so kernels never
+# import the tuner: repro.perf.tune owns measurement, persistence and
+# device-kind filtering and calls set_tuning with the survivors.
+_TUNING: dict = {}
+
+
+def set_tuning(table: dict) -> None:
+    """Install tuned dispatch parameters: ``{(family, backend,
+    shape_class): {param: value}}``.  Replaces the whole table.  Entries
+    apply only where the caller left a parameter unspecified; unknown
+    params are ignored by :func:`tuned`.  Changing the table does not
+    drop already-compiled programs (old keys stay warm; call
+    :func:`clear_jit_caches` to reclaim them)."""
+    global _TUNING
+    _TUNING = dict(table)
+
+
+def get_tuning() -> dict:
+    """The installed tuning table (read-only view for tests/tools)."""
+    return dict(_TUNING)
+
+
+def tuned(family: str, backend: str, shape_class: str, **overrides):
+    """Resolve the dispatch parameters for one (family, backend, shape
+    class): start from :data:`DEFAULT_PARAMS`, apply the installed
+    tuning entry, then apply caller ``overrides`` whose value is not
+    None (an explicit argument always beats the tuner).  Returns a fresh
+    dict — pure lookup, no measurement, safe at trace time."""
+    p = dict(DEFAULT_PARAMS[family])
+    entry = _TUNING.get((family, backend, shape_class))
+    if entry:
+        p.update({k: v for k, v in entry.items() if k in p})
+    p.update({k: v for k, v in overrides.items() if v is not None})
+    return p
+
+
+def _shape_class_tables(M: int, F: int, C: int) -> str:
+    """Tuner key for the table-axis families (update/query/merge): the
+    dense (M, F, C) geometry IS the workload; B rides the bucket ladder."""
+    return f"M{M}xF{F}xC{C}"
+
+
+def _shape_class_route(T: int, M: int, F: int) -> str:
+    """Tuner key for the routing/predict families: folded node count and
+    feature width set the sweep's working set; B rides the ladder and
+    the ply count is a dispatch key, not a tuning key."""
+    return f"T{T}xM{M}xF{F}"
+
+
+# --------------------------------------------------------------------------
+# the ONE cached-jit dispatch engine (all concrete entry points funnel here)
+# --------------------------------------------------------------------------
+
+def _is_traced(*trees) -> bool:
+    """True when any leaf of the argument pytrees is a JAX tracer — i.e.
+    the caller is already inside a jit/vmap/scan trace and the op must
+    inline rather than dispatch through its own cached jit."""
+    return any(isinstance(leaf, jax.core.Tracer)
+               for t in trees for leaf in jax.tree.leaves(t))
+
+
+@functools.lru_cache(maxsize=None)
+def _dispatch_cached(impl, donate_x: bool, statics: tuple):
+    """The single cached-jit factory behind every concrete dispatch
+    family: one entry per (impl, donation policy, static params).  The
+    inner jit cache is keyed on argument shapes, which the public
+    wrappers bucket.  ``donate_x=True`` donates the batch argument
+    (every row-dispatch impl names it ``X``) so XLA can reuse the
+    request buffer for sweep temporaries; XLA:CPU cannot alias donated
+    buffers (it would only warn per compile), so donation engages on
+    TPU only and callers must hand an engine-owned buffer."""
+    donate = ("X",) if donate_x and jax.default_backend() == "tpu" else ()
+    return jax.jit(functools.partial(impl, **dict(statics)),
+                   donate_argnames=donate)
+
+
+def _dispatch(impl, *, donate_x: bool = False, **statics):
+    """Resolve the cached jit for ``impl`` closed over ``statics``.
+    Same (impl, statics) -> the same jit object, process-wide — the
+    no-recompile invariant every ``_jit_*`` family shim inherits."""
+    return _dispatch_cached(impl, donate_x, tuple(sorted(statics.items())))
+
+
+def _ladder_bucket(n: int, lo: int, ladder: str) -> int:
+    """Smallest bucket >= n on the chosen ladder (``lo`` a power of two).
+
+    ``"pow2"``: {lo, 2lo, 4lo, ...} — O(log n) compiled programs, up to
+    2x pad waste just past a boundary.  ``"pow2_half"``: half-steps
+    {lo, 1.5lo, 2lo, 3lo, 4lo, ...} — still O(log n) programs (two per
+    octave) but caps pad waste at 1.33x; the tuner picks it when the
+    measured per-row cost outweighs the extra compiles for a shape
+    class.  Both ladders are schedule-only: pad rows vanish on every
+    backend."""
+    b = lo
+    while b < n:
+        if ladder == "pow2_half":
+            h = b + b // 2
+            if n <= h:
+                return h
+        b *= 2
+    return b
+
+
+def _pow2_bucket(n: int, lo: int) -> int:
+    """Smallest power-of-two multiple of ``lo`` holding ``n`` (``lo`` must
+    itself be a power of two) — the shape-bucketing rule that bounds the
+    cached-jit compile count to O(log n) entries."""
+    return _ladder_bucket(n, lo, "pow2")
+
+
+def pad_rows(X, lo: int = 128, ladder: str = "pow2"):
+    """Pad request rows up to their ladder bucket — the dispatch
+    prologue every concrete row-dispatch entry point shares.  Returns
+    ``(padded X, original B, padded?)``; pad rows are zero and the
+    callers slice ``[:B]`` back iff padding happened."""
+    B, F = X.shape
+    Bp = _ladder_bucket(max(B, lo), lo, ladder)
+    if Bp == B:
+        return X, B, False
+    return jnp.concatenate([X, jnp.zeros((Bp - B, F), X.dtype)]), B, True
+
+
+def pad_rows_pow2(X, lo: int = 128):
+    """:func:`pad_rows` on the power-of-two ladder (the historical
+    default; kept as the stable public name)."""
+    return pad_rows(X, lo, "pow2")
+
+
+def dispatch_rows(impl, tables, X, *, statics: dict, ladder: str = "pow2",
+                  donate_x: bool = False):
+    """Concrete row dispatch: pad ``X`` to its ladder bucket, run the
+    cached jit for (impl, statics) over ``(*tables, X)``, slice the
+    padded rows back off the LAST axis of the result.  The one body
+    behind ``forest_route``/``route``/``predict_snapshot``/live forest
+    predict — the three read-path dispatch layers this replaces each
+    hand-rolled the same four lines."""
+    X, B, padded = pad_rows(X, 128, ladder)
+    if donate_x and not padded and jax.default_backend() == "tpu":
+        X = jnp.copy(X)     # donate our copy, not the caller's buffer
+    out = _dispatch(impl, donate_x=donate_x, **statics)(*tables, X)
+    return out[..., :B] if padded else out
+
+
+# --------------------------------------------------------------------------
+# single-table ops
+# --------------------------------------------------------------------------
+
 def _pad_to(arr, mult, fill=0.0):
     n = arr.shape[0]
     rem = (-n) % mult
@@ -77,27 +283,64 @@ def _pad_to(arr, mult, fill=0.0):
     return jnp.concatenate([arr, jnp.full((rem,), fill, arr.dtype)])
 
 
-@functools.partial(jax.jit, static_argnames=("tile", "interpret"))
-def qo_update(table: qo_lib.QOTable, x, y, w=None, *, tile: int = 1024,
+#: A batch whose pow-2 round-up fits this width is absorbed in ONE tile
+#: pass no matter what tile was requested (see :func:`qo_update_tile`).
+QO_SINGLE_PASS_MAX = 1024
+
+
+def qo_update_tile(B: int, tile: int) -> int:
+    """Resolve the streamed batch-tile width for a B-row update.
+
+    The requested ``tile`` is a *streaming-granularity cap for big
+    batches*, not a splitter for small ones: a batch whose pow-2
+    round-up fits one maximal tile (:data:`QO_SINGLE_PASS_MAX`) is
+    absorbed in a single pass of exactly that round-up (floored at the
+    128-lane alignment), so for B <= 1024 EVERY tile request is
+    bit-identical — pad rows carry w = 0 and vanish, and there is no
+    partial-tile Chan merge whose f32 order could differ
+    (tests/test_kernels.py pins B in {1, 127, 128, 129} across tile
+    choices).  The old ``min(tile, round_up)`` clamp split B = 129 into
+    two 128-passes under ``tile=128`` but one 256-pass under larger
+    requests — same math, different bits.  Batches past the single-pass
+    width stream at the requested tile, where granularity is a real
+    VMEM/occupancy knob (and IS bit-sensitive, which is why the tuner
+    never searches it on the kernel path — repro.perf.tune)."""
+    up = max(128, 1 << (B - 1).bit_length())
+    if up <= QO_SINGLE_PASS_MAX:
+        return up
+    return min(max(tile, 128), up)
+
+
+def _qo_update_impl(table, x, y, w, *, tile: int, interpret: bool):
+    dense, scal = _ref.pack_table(table)
+    dense = qo_update_pallas(dense, scal, x, y, w, tile=tile,
+                             interpret=interpret)
+    return _ref.unpack_table(dense, scal)
+
+
+def qo_update(table: qo_lib.QOTable, x, y, w=None, *, tile: int | None = None,
               interpret: bool | None = None) -> qo_lib.QOTable:
     """Kernel-backed equivalent of :func:`repro.core.qo.update`.
 
     table: dict QO table (capacity C); x/y: (B,) f32 observations;
     w: optional (B,) f32 sample weights (default 1, weight-0 rows vanish);
-    tile: batch tile streamed through VMEM per grid step.  Returns the
-    merged table (same shapes).
+    tile: batch tile streamed through VMEM per grid step (None: the
+    tuned value for this capacity class, default 1024, clamped by
+    :func:`qo_update_tile`).  Returns the merged table (same shapes).
     """
     interpret = default_interpret() if interpret is None else interpret
     x = jnp.asarray(x, jnp.float32).reshape(-1)
     y = jnp.asarray(y, jnp.float32).reshape(-1)
     w = jnp.ones_like(x) if w is None else jnp.asarray(w, jnp.float32).reshape(-1)
-    tile = min(tile, max(128, 1 << (int(x.shape[0]) - 1).bit_length()))
+    cap = int(table["sum_x"].shape[0])
+    tile = tuned("qo_update", "pallas", f"C{cap}", tile=tile)["tile"]
+    tile = qo_update_tile(int(x.shape[0]), tile)
     xp, yp, wp = _pad_to(x, tile), _pad_to(y, tile), _pad_to(w, tile)
-
-    dense, scal = _ref.pack_table(table)
-    dense = qo_update_pallas(dense, scal, xp, yp, wp, tile=tile,
-                             interpret=interpret)
-    return _ref.unpack_table(dense, scal)
+    if _is_traced(table, xp, yp, wp):
+        return _qo_update_impl(table, xp, yp, wp, tile=tile,
+                               interpret=interpret)
+    return _dispatch(_qo_update_impl, tile=tile, interpret=interpret)(
+        table, xp, yp, wp)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
@@ -124,24 +367,6 @@ def qo_best_split(table: qo_lib.QOTable, *,
 # --------------------------------------------------------------------------
 # forest-scale ops: every (leaf, feature) table of a Hoeffding tree at once
 # --------------------------------------------------------------------------
-
-def _is_traced(*trees) -> bool:
-    """True when any leaf of the argument pytrees is a JAX tracer — i.e.
-    the caller is already inside a jit/vmap/scan trace and the op must
-    inline rather than dispatch through its own cached jit."""
-    return any(isinstance(leaf, jax.core.Tracer)
-               for t in trees for leaf in jax.tree.leaves(t))
-
-
-def _pow2_bucket(n: int, lo: int) -> int:
-    """Smallest power-of-two multiple of ``lo`` holding ``n`` (``lo`` must
-    itself be a power of two) — the shape-bucketing rule that bounds the
-    cached-jit compile count to O(log n) entries."""
-    b = lo
-    while b < n:
-        b *= 2
-    return b
-
 
 def forest_bin_ids(ao_radius, ao_origin, leaf, X, n_bins: int) -> jax.Array:
     """Quantize each routed row into its leaf's per-feature tables.
@@ -202,21 +427,20 @@ def _forest_update_impl(ao_y, ao_sum_x, ao_radius, ao_origin, leaf, X, y, w,
     dense = pack_forest(ao_y, ao_sum_x, ao_radius, ao_origin, tile_m=tile_m)
     dense = qo_update_leaves_pallas(
         dense, leaf[None, :], X.T, y[None, :], w[None, :], n_bins=C,
-        tile_b=tile_b, tile_m=tile_m, interpret=(backend == "interpret"))
+        tile_b=tile_b, tile_m=tile_m, interpret=_kernel_interpret(backend))
     return unpack_forest(dense, M, C)
 
 
-@functools.lru_cache(maxsize=None)
 def _jit_forest_update(backend: str, tile_b: int, tile_m: int):
-    """Cached jit of the absorb op, keyed on backend + tiling; the inner
-    jit cache is keyed on shapes, which the public wrapper buckets."""
-    return jax.jit(functools.partial(_forest_update_impl, backend=backend,
-                                     tile_b=tile_b, tile_m=tile_m))
+    """Keyed handle for the absorb op's cached jit (the ``_cache_size``
+    regression hook); delegates to the shared :func:`_dispatch`."""
+    return _dispatch(_forest_update_impl, backend=backend,
+                     tile_b=tile_b, tile_m=tile_m)
 
 
 def forest_update(ao_y, ao_sum_x, ao_radius, ao_origin, leaf, X, y, w=None, *,
-                  backend: str | None = None, tile_b: int = 256,
-                  tile_m: int = 128):
+                  backend: str | None = None, tile_b: int | None = None,
+                  tile_m: int | None = None):
     """Absorb a routed batch into every (leaf, feature) QO table.
 
     ao_y: Stats dict of (M, F, C); ao_sum_x: (M, F, C); ao_radius/ao_origin:
@@ -227,10 +451,15 @@ def forest_update(ao_y, ao_sum_x, ao_radius, ao_origin, leaf, X, y, w=None, *,
     property-tested in tests/test_weighted.py).
     Returns the merged (ao_y, ao_sum_x).
 
-    Called with concrete arrays this dispatches through a cached jit with
-    the batch padded (leaf = -1, w = 0: such rows vanish on every backend)
-    to a power-of-two bucket, so ragged streaming batches reuse a bounded
-    set of compiled programs.  Under an enclosing trace it inlines, so the
+    ``tile_b``/``tile_m`` (None: tuned, defaults 256/128) are schedule
+    knobs; pad rows carry leaf = -1, w = 0 and vanish on every backend.
+    ``tile_m`` (table-axis grid) and the batch ladder are bit-identical
+    under any value everywhere; ``tile_b`` is bit-identical on jnp (the
+    fused lowering ignores it) but sets the streaming Chan-merge order
+    on the kernel path, where the tuner pins it.  Called with concrete arrays
+    this dispatches through a cached jit with the batch padded to its
+    ladder bucket, so ragged streaming batches reuse a bounded set of
+    compiled programs.  Under an enclosing trace it inlines, so the
     caller's jit fuses the whole absorb stage.
     """
     backend = resolve_backend(backend)
@@ -238,12 +467,16 @@ def forest_update(ao_y, ao_sum_x, ao_radius, ao_origin, leaf, X, y, w=None, *,
     X = jnp.asarray(X, jnp.float32)
     y = jnp.asarray(y, jnp.float32).reshape(-1)
     w = jnp.ones_like(y) if w is None else jnp.asarray(w, jnp.float32).reshape(-1)
+    M, F, C = ao_sum_x.shape
+    p = tuned("forest_update", backend, _shape_class_tables(M, F, C),
+              tile_b=tile_b, tile_m=tile_m)
     if _is_traced(ao_y, ao_sum_x, ao_radius, ao_origin, leaf, X, y, w):
         return _forest_update_impl(ao_y, ao_sum_x, ao_radius, ao_origin,
                                    leaf, X, y, w, backend=backend,
-                                   tile_b=tile_b, tile_m=tile_m)
-    leaf, X, y, w = _pad_batch(leaf, X, y, w, _pow2_bucket(X.shape[0], 128))
-    return _jit_forest_update(backend, tile_b, tile_m)(
+                                   tile_b=p["tile_b"], tile_m=p["tile_m"])
+    leaf, X, y, w = _pad_batch(
+        leaf, X, y, w, _ladder_bucket(X.shape[0], 128, p["batch_ladder"]))
+    return _jit_forest_update(backend, p["tile_b"], p["tile_m"])(
         ao_y, ao_sum_x, ao_radius, ao_origin, leaf, X, y, w)
 
 
@@ -257,20 +490,19 @@ def _forest_merge_impl(a_y, a_sum_x, b_y, b_sum_x, *, backend: str,
     dense = qo_merge_pallas(
         pack_merge_planes(a_y, a_sum_x, tile_r=tile_r),
         pack_merge_planes(b_y, b_sum_x, tile_r=tile_r),
-        tile_r=tile_r, interpret=(backend == "interpret"))
+        tile_r=tile_r, interpret=_kernel_interpret(backend))
     return unpack_merge_planes(dense, shape)
 
 
 @functools.lru_cache(maxsize=None)
 def _jit_forest_merge(backend: str, tile_r: int):
-    """Cached jit of the table merge, keyed on backend + tiling; the inner
-    jit cache is keyed on shapes (fixed for a given forest)."""
-    return jax.jit(functools.partial(_forest_merge_impl, backend=backend,
-                                     tile_r=tile_r))
+    """Keyed handle for the table merge's cached jit (``cache_info()``
+    is the no-fragmentation hook); delegates to :func:`_dispatch`."""
+    return _dispatch(_forest_merge_impl, backend=backend, tile_r=tile_r)
 
 
 def forest_merge(a_y, a_sum_x, b_y, b_sum_x, *, backend: str | None = None,
-                 tile_r: int = 256):
+                 tile_r: int | None = None):
     """Chan-merge two same-shape QO table sets (DESIGN.md §4.1).
 
     a_y/b_y: Stats dicts of (N, F, C); a_sum_x/b_sum_x: (N, F, C) — N is
@@ -290,6 +522,9 @@ def forest_merge(a_y, a_sum_x, b_y, b_sum_x, *, backend: str | None = None,
     jitted sync step fuses the whole reduction.
     """
     backend = resolve_backend(backend)
+    N, F, C = a_sum_x.shape
+    tile_r = tuned("forest_merge", backend, _shape_class_tables(N, F, C),
+                   tile_r=tile_r)["tile_r"]
     if _is_traced(a_y, a_sum_x, b_y, b_sum_x):
         return _forest_merge_impl(a_y, a_sum_x, b_y, b_sum_x,
                                   backend=backend, tile_r=tile_r)
@@ -367,7 +602,7 @@ def _query_full(ao_y, ao_sum_x, ao_radius, ao_origin, attempt, *,
         dense = pack_forest(ao_y, ao_sum_x, ao_radius, ao_origin, attempt,
                             tile_m=tile_m)
         out = qo_query_batched_pallas(dense, tile_m=tile_m,
-                                      interpret=(backend == "interpret"))
+                                      interpret=_kernel_interpret(backend))
         score = jnp.transpose(out[:, 0, :M, :], (1, 0, 2)).reshape(M * F, -1)
         cand = jnp.transpose(out[:, 1, :M, :], (1, 0, 2)).reshape(M * F, -1)
     best = jnp.argmax(score, -1)
@@ -402,24 +637,32 @@ def _query_compact(ao_y, ao_sum_x, ao_radius, ao_origin, attempt, *,
 
 @functools.lru_cache(maxsize=None)
 def _jit_forest_query(backend: str, tile_m: int, kpad: int | None):
-    """Cached jit of one query bucket (kpad=None: the full scan)."""
-    fn = _query_full if kpad is None else \
-        functools.partial(_query_compact, kpad=kpad)
-    return jax.jit(functools.partial(fn, backend=backend, tile_m=tile_m))
+    """Keyed handle for one query bucket's cached jit (kpad=None: the
+    full scan; ``cache_info()``/``_cache_size()`` are the regression
+    hooks); delegates to the shared :func:`_dispatch`."""
+    if kpad is None:
+        return _dispatch(_query_full, backend=backend, tile_m=tile_m)
+    return _dispatch(_query_compact, backend=backend, tile_m=tile_m,
+                     kpad=kpad)
 
 
 # --------------------------------------------------------------------------
 # batched routing: the read-path primitive (DESIGN.md §2.6)
 # --------------------------------------------------------------------------
 
-def depth_bucket(depth: int) -> int:
-    """Even-ply bucket for the routing dispatch: extra plies are self-loop
+def depth_bucket(depth: int, round_to: int = 2) -> int:
+    """Ply bucket for the routing dispatch: extra plies are self-loop
     no-ops (leaves re-select themselves), so rounding the ply count up is
-    free of correctness cost; rounding to the next even count bounds the
-    compile cache to max_depth/2 programs per backend while wasting at
-    most one ply (a power-of-two ladder would route a depth-9 tree with
-    16 plies — 7 wasted memory passes on the serving hot loop)."""
-    return max(0, depth + (depth & 1))
+    free of correctness cost; rounding to the next multiple of
+    ``round_to`` bounds the compile cache to max_depth/round_to programs
+    per backend while wasting at most round_to - 1 plies (a power-of-two
+    ladder would route a depth-9 tree with 16 plies — 7 wasted memory
+    passes on the serving hot loop).  ``round_to`` is the tuned
+    ``ply_round`` knob: 1 = exact plies (most programs, zero waste),
+    default 2 = even plies (the historical choice)."""
+    if round_to <= 1:
+        return max(0, depth)
+    return max(0, -(-depth // round_to) * round_to)
 
 
 def _forest_route_jnp(feature, threshold, child, is_leaf, X, *, plies: int):
@@ -480,45 +723,45 @@ def _forest_route_impl(feature, threshold, child, is_leaf, X, *,
     node0 = jnp.broadcast_to(
         (jnp.arange(T, dtype=jnp.int32) * M)[:, None], (T, Bp))
     out = qo_route_pallas(node0, Xp, attrs, plies=plies, tile_b=tile_b,
-                          interpret=(backend == "interpret"))
+                          interpret=_kernel_interpret(backend))
     return out[:, :B] - (jnp.arange(T, dtype=jnp.int32) * M)[:, None]
 
 
-def pad_rows_pow2(X, lo: int = 128):
-    """Pad request rows up to their power-of-two batch bucket — the one
-    dispatch prologue every concrete read-path entry point shares.
-    Returns ``(padded X, original B, padded?)``; pad rows are zero and
-    the callers slice ``[:B]`` back iff padding happened."""
-    B, F = X.shape
-    Bp = _pow2_bucket(max(B, lo), lo)
-    if Bp == B:
-        return X, B, False
-    return jnp.concatenate([X, jnp.zeros((Bp - B, F), X.dtype)]), B, True
+def _route_single_impl(feature, threshold, child, is_leaf, X, *,
+                       plies: int, backend: str, tile_b: int):
+    """Single-tree twin of :func:`_forest_route_impl`: the (M,) ->
+    (T=1, M) axis expansion happens inside the trace (free), not as
+    per-call eager reshapes on the serving hot path."""
+    return _forest_route_impl(
+        feature[None], threshold[None], child[None], is_leaf[None], X,
+        plies=plies, backend=backend, tile_b=tile_b)[0]
 
 
 @functools.lru_cache(maxsize=None)
 def _jit_route(backend: str, tile_b: int, plies: int):
-    """Cached jit of one routing ply bucket; the inner jit cache is keyed
-    on shapes, which the public wrapper buckets."""
-    return jax.jit(functools.partial(_forest_route_impl, backend=backend,
-                                     tile_b=tile_b, plies=plies))
+    """Keyed handle for one routing ply bucket's cached jit; delegates
+    to the shared :func:`_dispatch`."""
+    return _dispatch(_forest_route_impl, backend=backend, tile_b=tile_b,
+                     plies=plies)
 
 
 @functools.lru_cache(maxsize=None)
 def _jit_route_single(backend: str, tile_b: int, plies: int):
-    """Single-tree twin of :func:`_jit_route`: the (M,) -> (T=1, M) axis
-    expansion happens inside the trace (free), not as per-call eager
-    reshapes on the serving hot path."""
-    def impl(feature, threshold, child, is_leaf, X):
-        return _forest_route_impl(
-            feature[None], threshold[None], child[None], is_leaf[None], X,
-            plies=plies, backend=backend, tile_b=tile_b)[0]
-    return jax.jit(impl)
+    """Single-tree twin of :func:`_jit_route` (same shared factory)."""
+    return _dispatch(_route_single_impl, backend=backend, tile_b=tile_b,
+                     plies=plies)
+
+
+def _route_params(backend: str, T: int, M: int, F: int,
+                  tile_b: int | None):
+    """Tuned routing schedule for one folded (T·M, F) geometry."""
+    return tuned("forest_route", backend, _shape_class_route(T, M, F),
+                 tile_b=tile_b)
 
 
 def forest_route(feature, threshold, child, is_leaf, X, *,
                  depth: int, backend: str | None = None,
-                 tile_b: int = 256) -> jax.Array:
+                 tile_b: int | None = None) -> jax.Array:
     """Route a batch through T trees at once — (T, B) i32 leaf ids.
 
     feature/threshold/is_leaf: (T, M); child: (T, M, 2) with -1 at
@@ -529,11 +772,12 @@ def forest_route(feature, threshold, child, is_leaf, X, *,
     :func:`repro.core.serve.predict_snapshot`).
 
     Called with concrete arrays this dispatches through cached jits keyed
-    on (backend, even-ply depth bucket) with the batch padded to a
-    power-of-two bucket (pad rows route from the root and are sliced
-    off), so serving never recompiles per request size.  Under an
-    enclosing trace it inlines with ``plies = depth`` exactly, so a
-    jitted training step fuses the whole sweep.
+    on (backend, ply bucket) with the batch padded to its ladder bucket
+    (pad rows route from the root and are sliced off), so serving never
+    recompiles per request size.  Under an enclosing trace it inlines
+    with ``plies = depth`` exactly, so a jitted training step fuses the
+    whole sweep.  ``tile_b`` (None: tuned, default 256) and the tuned
+    ``ply_round``/``batch_ladder`` knobs are schedule-only.
     """
     backend = resolve_backend(backend)
     feature = jnp.asarray(feature, jnp.int32)
@@ -541,18 +785,22 @@ def forest_route(feature, threshold, child, is_leaf, X, *,
     child = jnp.asarray(child, jnp.int32)
     is_leaf = jnp.asarray(is_leaf, jnp.bool_)
     X = jnp.asarray(X, jnp.float32)
+    T, M = feature.shape
+    p = _route_params(backend, T, M, X.shape[1], tile_b)
     if _is_traced(feature, threshold, child, is_leaf, X):
         return _forest_route_impl(feature, threshold, child, is_leaf, X,
                                   plies=depth, backend=backend,
-                                  tile_b=tile_b)
-    X, B, padded = pad_rows_pow2(X)
-    out = _jit_route(backend, tile_b, depth_bucket(depth))(
-        feature, threshold, child, is_leaf, X)
-    return out[:, :B] if padded else out
+                                  tile_b=p["tile_b"])
+    return dispatch_rows(
+        _forest_route_impl, (feature, threshold, child, is_leaf), X,
+        statics=dict(backend=backend, tile_b=p["tile_b"],
+                     plies=depth_bucket(depth, p["ply_round"])),
+        ladder=p["batch_ladder"])
 
 
 def route(feature, threshold, child, is_leaf, X, *, depth: int,
-          backend: str | None = None, tile_b: int = 256) -> jax.Array:
+          backend: str | None = None,
+          tile_b: int | None = None) -> jax.Array:
     """Single-tree batched routing — (B,) i32 leaf ids.
 
     The T = 1 view of :func:`forest_route` (same bucketing, same folded
@@ -566,15 +814,16 @@ def route(feature, threshold, child, is_leaf, X, *, depth: int,
     child = jnp.asarray(child, jnp.int32)
     is_leaf = jnp.asarray(is_leaf, jnp.bool_)
     X = jnp.asarray(X, jnp.float32)
+    p = _route_params(backend, 1, feature.shape[0], X.shape[1], tile_b)
     if _is_traced(feature, threshold, child, is_leaf, X):
-        return _forest_route_impl(feature[None], threshold[None],
-                                  child[None], is_leaf[None], X,
+        return _route_single_impl(feature, threshold, child, is_leaf, X,
                                   plies=depth, backend=backend,
-                                  tile_b=tile_b)[0]
-    X, B, padded = pad_rows_pow2(X)
-    out = _jit_route_single(backend, tile_b, depth_bucket(depth))(
-        feature, threshold, child, is_leaf, X)
-    return out[:B] if padded else out
+                                  tile_b=p["tile_b"])
+    return dispatch_rows(
+        _route_single_impl, (feature, threshold, child, is_leaf), X,
+        statics=dict(backend=backend, tile_b=p["tile_b"],
+                     plies=depth_bucket(depth, p["ply_round"])),
+        ladder=p["batch_ladder"])
 
 
 _JIT_CACHES = []
@@ -588,7 +837,7 @@ def register_jit_cache(fn):
     return fn
 
 
-register_jit_cache(_jit_forest_update)
+register_jit_cache(_dispatch_cached)
 register_jit_cache(_jit_forest_merge)
 register_jit_cache(_jit_forest_query)
 register_jit_cache(_jit_route)
@@ -603,9 +852,9 @@ def clear_jit_caches() -> None:
 
 
 def forest_best_splits(ao_y, ao_sum_x, ao_radius, ao_origin, attempt, *,
-                       backend: str | None = None, tile_m: int = 128,
+                       backend: str | None = None, tile_m: int | None = None,
                        compact: bool = True,
-                       min_bucket: int = QUERY_MIN_BUCKET):
+                       min_bucket: int | None = None):
     """Best split candidate of every (leaf, feature) table.
 
     attempt: (M,) bool — tables of leaves below their grace period are
@@ -624,10 +873,14 @@ def forest_best_splits(ao_y, ao_sum_x, ao_radius, ao_origin, attempt, *,
     runtime by ``lax.switch``, so a jitted streaming update still only
     pays for the branch it takes.  ``compact=False`` keeps the full
     M-table scan (the reference path; attempting rows of both paths are
-    bit-identical).
+    bit-identical).  ``tile_m``/``min_bucket`` (None: tuned, defaults
+    128/8) are schedule knobs — every legal value is bit-identical.
     """
     backend = resolve_backend(backend)
     M, F, C = ao_sum_x.shape
+    p = tuned("forest_query", backend, _shape_class_tables(M, F, C),
+              tile_m=tile_m, min_bucket=min_bucket)
+    tile_m, min_bucket = p["tile_m"], p["min_bucket"]
     buckets = query_buckets(M, min_bucket)
     traced = _is_traced(ao_y, ao_sum_x, ao_radius, ao_origin, attempt)
     if not compact or len(buckets) == 1:

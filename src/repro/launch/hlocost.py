@@ -10,7 +10,7 @@ so we walk the module ourselves:
     (nested scans multiply);
   * flops: counted for ``dot`` ops as 2 * prod(output) * prod(contracted
     lhs dims) * multiplicity (elementwise flops are <5% for these models
-    and are ignored — noted in EXPERIMENTS.md);
+    and are ignored);
   * HBM bytes: for traffic-bearing ops (fusion, dot, copy, gather/scatter,
     dynamic-(update-)slice, reduce, transpose, collectives) we charge
     operand + result bytes * multiplicity.  Loop-invariant weights streamed
@@ -18,8 +18,10 @@ so we walk the module ourselves:
   * collective bytes: result-shape bytes * multiplicity per collective op,
     reported by kind.
 
-This is the flops/bytes source for EXPERIMENTS.md §Roofline; raw
-cost_analysis numbers are also recorded for reference.
+This is the flops/bytes source for :mod:`repro.perf.profile`'s
+per-op cost harvest (cross-checkable against the analytic models in
+:mod:`benchmarks.roofline`, DESIGN §8.2); raw cost_analysis numbers
+are also recorded for reference.
 """
 from __future__ import annotations
 

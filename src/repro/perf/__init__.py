@@ -1,0 +1,11 @@
+"""Performance layer: measured autotuning of the kernel dispatch
+schedule (:mod:`repro.perf.tune`) and profiler trace / per-op cost
+capture (:mod:`repro.perf.profile`).  See DESIGN.md §8.
+
+The package is deliberately one-way: :mod:`repro.kernels.ops` never
+imports it — the tuner measures through the public kernel wrappers and
+hands the surviving parameters to :func:`repro.kernels.ops.set_tuning`,
+so an untuned process (and every traced call) behaves exactly as if
+this package did not exist.
+"""
+__all__ = ["tune", "profile"]  # import the submodules explicitly

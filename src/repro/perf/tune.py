@@ -1,0 +1,431 @@
+"""Measured autotuner for the kernel dispatch schedule (DESIGN.md §8).
+
+Every tile/grid constant in :mod:`repro.kernels.ops` is a *schedule*
+knob — bit-identical under any legal value — whose default was eyeballed
+on one container.  This module replaces the guess with a measurement:
+
+    PYTHONPATH=src python -m repro.perf.tune            # tune + cache
+    PYTHONPATH=src python -m repro.perf.tune --smoke    # tiny-grid CI check
+
+For each (family, backend, shape class) it races every candidate in
+:data:`SEARCH_SPACE` through the PUBLIC dispatch wrapper — so a
+candidate pays exactly what real dispatch will pay, including padding
+and cache-key formation — in an interleaved best-of-``reps`` loop (the
+same-run convention from docs/benchmarks.md: load moves all candidates
+together, so the argmin is load-stable even when the absolute times are
+not).  Before any candidate is timed its output is asserted *bitwise*
+identical to the all-defaults output: a candidate that changes a single
+bit is a semantics bug in the kernels, not a schedule choice, and the
+tuner refuses to continue (:class:`TuningError`).
+
+One knob class is excluded by construction rather than gated: the
+batch-STREAMING tiles (``forest_update.tile_b``, ``qo_update.tile``)
+set the granularity at which a batch flows through the kernels'
+sequential Chan merge, so on the kernel path ("pallas"/"interpret")
+changing them reorders f32 accumulation — same math, different bits.
+:func:`candidates` drops them from kernel-path grids
+(:data:`KERNEL_STREAM_KNOBS`); on the jnp backend the fused lowering
+ignores them entirely, so there they remain searchable (and trivially
+bit-identical) dispatch-key shapers.
+
+Winners persist to a JSON cache keyed by **device kind** as well — a
+cache tuned on a TPU v5e never steers a CPU host — and
+:func:`install` filters the cache to the current device before handing
+the entries to :func:`repro.kernels.ops.set_tuning`.  The search space
+always contains the hard-coded defaults, so the installed winner is
+never measurably worse than an untuned machine on the machine that
+tuned it; a machine with no cache entry simply keeps the defaults.
+"""
+from __future__ import annotations
+
+import argparse
+import contextlib
+import itertools
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops as kops
+
+__all__ = [
+    "SEARCH_SPACE", "KERNEL_STREAM_KNOBS", "SMOKE_SPACE", "SMOKE_SHAPES",
+    "TUNE_FAMILIES",
+    "TuningError", "candidates", "make_workloads", "tune_family", "tune",
+    "cache_path", "load_cache", "save_cache", "install", "ensure",
+    "device_kind",
+]
+
+#: Candidate values per tunable parameter, per dispatch family.  Every
+#: family's space CONTAINS :data:`repro.kernels.ops.DEFAULT_PARAMS` (the
+#: tuner asserts it), so "best measured" can never lose to "untuned".
+#: Kernel-path tile knobs (tile_b/tile_m/tile_r/tile) only reshape the
+#: Pallas grid; the jnp backend's real knobs are the dispatch-shaping
+#: ones — ``batch_ladder`` (how much pad work a ragged batch buys),
+#: ``ply_round`` (wasted route plies vs compiled-program count) and the
+#: query ``min_bucket`` (gather bucket granularity).
+SEARCH_SPACE = {
+    "qo_update": {"tile": (128, 256, 512, 1024)},
+    "forest_update": {"tile_b": (128, 256, 512), "tile_m": (64, 128),
+                      "batch_ladder": ("pow2", "pow2_half")},
+    "forest_query": {"tile_m": (64, 128, 256), "min_bucket": (4, 8, 16)},
+    "forest_route": {"tile_b": (128, 256, 512),
+                     "batch_ladder": ("pow2", "pow2_half"),
+                     "ply_round": (1, 2, 4)},
+    "forest_merge": {"tile_r": (64, 128, 256, 512)},
+}
+
+#: Knobs that are NOT searchable on the kernel path ("pallas" /
+#: "interpret"): they set the width at which the batch streams through a
+#: sequential per-tile Chan merge, so a different value reorders f32
+#: accumulation — bit-different output, i.e. a semantics knob there, not
+#: a schedule knob.  The jnp lowering fuses the whole batch in one
+#: segment-sum (these knobs never reach the program), so on "jnp" they
+#: stay in the grid purely as dispatch-key shapers.
+KERNEL_STREAM_KNOBS = {
+    "forest_update": ("tile_b",),
+    "qo_update": ("tile",),
+}
+
+#: The families :func:`tune` covers by default: the forest-scale hot
+#: paths.  ``qo_update`` is tunable but opt-in — its kernel always runs
+#: the Pallas path (interpreter off-TPU), so racing it on a CPU host
+#: measures the interpreter, not a schedule.
+TUNE_FAMILIES = ("forest_update", "forest_query", "forest_route",
+                 "forest_merge")
+
+#: Two-candidates-per-knob truncation for the CI smoke: exercises the
+#: full tune -> assert-bit-identity -> save -> load -> install loop in
+#: seconds, not minutes.
+SMOKE_SPACE = {
+    fam: {k: (v[0], v[-1]) if len(v) > 1 else v for k, v in knobs.items()}
+    for fam, knobs in SEARCH_SPACE.items()
+}
+
+#: Workload shapes for the smoke run (full-run defaults are in
+#: :func:`make_workloads`).
+SMOKE_SHAPES = dict(M=64, F=4, C=8, T=4, B=260)
+
+
+class TuningError(AssertionError):
+    """A candidate schedule changed the op's output bits — a kernel
+    semantics bug, never a legal tuning outcome."""
+
+
+def device_kind() -> str:
+    """Tuning-cache namespace for this host's accelerator (e.g. ``cpu``,
+    ``TPU v5e``) — entries never cross device kinds."""
+    return jax.devices()[0].device_kind
+
+
+def candidates(family: str, space: dict | None = None,
+               backend: str = "jnp") -> list[dict]:
+    """The family's candidate grid as a list of full param dicts (cross
+    product of ``space[family]``, defaults filled for unmentioned knobs).
+    On kernel-path backends the :data:`KERNEL_STREAM_KNOBS` are pinned
+    at their defaults (never searched — see the module docstring).  The
+    all-defaults point is always present (prepended if the space was
+    truncated past it)."""
+    knobs = dict((space or SEARCH_SPACE)[family])
+    if backend != "jnp":
+        for k in KERNEL_STREAM_KNOBS.get(family, ()):
+            knobs.pop(k, None)
+    defaults = dict(kops.DEFAULT_PARAMS[family])
+    keys = sorted(knobs)
+    grid = [dict(defaults, **dict(zip(keys, combo)))
+            for combo in itertools.product(*(knobs[k] for k in keys))]
+    if defaults not in grid:
+        grid.insert(0, defaults)
+    return grid
+
+
+def _complete_trees(T: int, M: int, F: int, rng):
+    """T perfect binary trees in the (T, M) routing layout: internal
+    node i has children (2i+1, 2i+2) — the pairs-allocation contract —
+    random features/thresholds, and every row past the realized node
+    count is a self-contained pad leaf.  Returns the arrays + depth."""
+    d = 1
+    while 2 ** (d + 2) - 1 <= M:
+        d += 1
+    n_int = 2 ** d - 1
+    feature = rng.integers(0, F, (T, M)).astype(np.int32)
+    threshold = rng.normal(0, 1, (T, M)).astype(np.float32)
+    child = np.full((T, M, 2), -1, np.int32)
+    is_leaf = np.ones((T, M), bool)
+    ii = np.arange(n_int)
+    child[:, :n_int, 0] = 2 * ii + 1
+    child[:, :n_int, 1] = 2 * ii + 2
+    is_leaf[:, :n_int] = False
+    return (jnp.asarray(feature), jnp.asarray(threshold),
+            jnp.asarray(child), jnp.asarray(is_leaf), d)
+
+
+def make_workloads(M: int = 256, F: int = 8, C: int = 16, T: int = 8,
+                   B: int = 1300, seed: int = 0) -> dict:
+    """Fixed-seed representative inputs for every tunable family.
+
+    B = 1300 deliberately sits just past a pow-2 bucket boundary (1024)
+    — the regime where the ladder choice matters most; tables carry a
+    realistic occupancy mix (empty, singleton and populated bins).
+    Returns the input arrays plus each family's shape-class string.
+    """
+    rng = np.random.default_rng(seed)
+    n = rng.poisson(4.0, (M, F, C)).astype(np.float32)
+    mean = np.where(n > 0, rng.normal(0, 1, (M, F, C)), 0).astype(np.float32)
+    m2 = np.where(n > 1, rng.gamma(2.0, 1.0, (M, F, C)), 0).astype(np.float32)
+    ao_y = {"n": jnp.asarray(n), "mean": jnp.asarray(mean),
+            "m2": jnp.asarray(m2)}
+    ao_sum_x = jnp.asarray(
+        np.where(n > 0, rng.normal(0, 1, (M, F, C)), 0).astype(np.float32))
+    ao_radius = jnp.asarray(rng.uniform(0.5, 1.5, (M, F)).astype(np.float32))
+    ao_origin = jnp.asarray(rng.normal(0, 0.1, (M, F)).astype(np.float32))
+    X = jnp.asarray(rng.normal(0, 1, (B, F)).astype(np.float32))
+    y = jnp.asarray(rng.normal(0, 1, (B,)).astype(np.float32))
+    leaf = jnp.asarray(rng.integers(0, M, (B,)).astype(np.int32))
+    attempt = jnp.asarray(np.arange(M) < max(1, M // 8))
+    feature, threshold, child, is_leaf, depth = _complete_trees(T, M, F, rng)
+    xs = jnp.asarray(rng.normal(0, 1, (B,)).astype(np.float32))
+    table = {"n": ao_y["n"][0, 0], "mean": ao_y["mean"][0, 0],
+             "m2": ao_y["m2"][0, 0], "sum_x": ao_sum_x[0, 0],
+             "radius": jnp.float32(1.0), "origin": jnp.float32(0.0)}
+    tabs = kops._shape_class_tables(M, F, C)
+    return {
+        "update": (ao_y, ao_sum_x, ao_radius, ao_origin, leaf, X, y),
+        "query": (ao_y, ao_sum_x, ao_radius, ao_origin, attempt),
+        "route": (feature, threshold, child, is_leaf, X),
+        "merge": (ao_y, ao_sum_x, ao_y, ao_sum_x),
+        "qo": (table, xs, y),
+        "depth": depth,
+        "shape_class": {
+            "forest_update": tabs, "forest_query": tabs,
+            "forest_merge": tabs,
+            "forest_route": kops._shape_class_route(T, M, F),
+            "qo_update": f"C{C}",
+        },
+    }
+
+
+def _runner(family: str, w: dict, backend: str):
+    """Zero-arg closure running one dispatch of ``family`` through its
+    public wrapper (no explicit schedule args, so the installed tuning
+    entry — and nothing else — steers the dispatch)."""
+    if family == "forest_update":
+        return lambda: kops.forest_update(*w["update"], backend=backend)
+    if family == "forest_query":
+        return lambda: kops.forest_best_splits(*w["query"], backend=backend)
+    if family == "forest_route":
+        return lambda: kops.forest_route(*w["route"], depth=w["depth"],
+                                         backend=backend)
+    if family == "forest_merge":
+        return lambda: kops.forest_merge(*w["merge"], backend=backend)
+    if family == "qo_update":
+        return lambda: kops.qo_update(*w["qo"])
+    raise KeyError(family)
+
+
+@contextlib.contextmanager
+def _only_tuning(entry: dict):
+    """Temporarily replace the process tuning table (restored on exit)."""
+    saved = kops.get_tuning()
+    try:
+        kops.set_tuning(entry)
+        yield
+    finally:
+        kops.set_tuning(saved)
+
+
+def _bitwise_equal(a, b) -> bool:
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    return len(la) == len(lb) and all(
+        np.array_equal(np.asarray(x), np.asarray(y), equal_nan=True)
+        for x, y in zip(la, lb))
+
+
+def tune_family(family: str, backend: str | None = None, *,
+                shapes: dict | None = None, space: dict | None = None,
+                reps: int = 3, inner: int = 2) -> tuple[str, dict]:
+    """Race the family's candidate grid on one workload; return
+    ``(cache key, entry)``.
+
+    Every candidate is first run once under :func:`_only_tuning` and
+    asserted bitwise-identical to the all-defaults output (compiling it
+    as a side effect), then raced interleaved: ``reps`` rounds visiting
+    every candidate per round (``inner`` calls each), keeping each
+    candidate's per-round minimum — host load perturbs a whole round,
+    not one candidate.  The entry records the winner's params plus the
+    measured (winner, default) microseconds and their ratio.
+    """
+    backend = kops.resolve_backend(backend)
+    if family == "qo_update":
+        backend = "pallas"          # the family is kernel-path-only
+    defaults = dict(kops.DEFAULT_PARAMS[family])
+    w = make_workloads(**(shapes or {}))
+    sc = w["shape_class"][family]
+    tkey = (family, backend, sc)
+    run = _runner(family, w, backend)
+    with _only_tuning({}):
+        ref = jax.tree.map(np.asarray, jax.block_until_ready(run()))
+    grid = candidates(family, space, backend=backend)
+    assert defaults in grid, (family, "search space must contain defaults")
+    best_us = [float("inf")] * len(grid)
+    for i, cand in enumerate(grid):      # identity gate + warm compile
+        with _only_tuning({tkey: cand}):
+            out = jax.block_until_ready(run())
+        if not _bitwise_equal(ref, out):
+            raise TuningError(
+                f"{family}/{backend}/{sc}: candidate {cand} is not "
+                f"bit-identical to defaults — schedule changed semantics")
+    for _ in range(reps):
+        for i, cand in enumerate(grid):
+            with _only_tuning({tkey: cand}):
+                t0 = time.perf_counter()
+                for _ in range(inner):
+                    jax.block_until_ready(run())
+                best_us[i] = min(best_us[i],
+                                 (time.perf_counter() - t0) / inner * 1e6)
+    win = int(np.argmin(best_us))
+    default_us = best_us[grid.index(defaults)]
+    entry = {
+        "params": grid[win],
+        "us": round(best_us[win], 3),
+        "default_us": round(default_us, 3),
+        "speedup_vs_default": round(default_us / best_us[win], 4),
+        "n_candidates": len(grid),
+    }
+    return "|".join((device_kind(), family, backend, sc)), entry
+
+
+def tune(families=TUNE_FAMILIES, backend: str | None = None, *,
+         shapes: dict | None = None, space: dict | None = None,
+         reps: int = 3) -> dict:
+    """Tune each family on the (shared) workload; returns ``{cache key:
+    entry}``.  Drops every cached jit afterwards so the candidate
+    programs compiled during the race don't linger."""
+    entries = {}
+    for fam in families:
+        key, entry = tune_family(fam, backend, shapes=shapes, space=space,
+                                 reps=reps)
+        entries[key] = entry
+    kops.clear_jit_caches()
+    return entries
+
+
+# --------------------------------------------------------------------------
+# persistence + installation
+# --------------------------------------------------------------------------
+
+_CACHE_VERSION = 1
+
+
+def cache_path() -> str:
+    """The tuning-cache location: ``$REPRO_TUNING_CACHE`` if set, else
+    ``.tuning_cache.json`` at the repo root (gitignored — a measured
+    artifact of one machine, never a committed baseline)."""
+    env = os.environ.get("REPRO_TUNING_CACHE")
+    if env:
+        return env
+    root = os.path.dirname(os.path.dirname(os.path.dirname(
+        os.path.dirname(os.path.abspath(__file__)))))
+    return os.path.join(root, ".tuning_cache.json")
+
+
+def load_cache(path: str | None = None) -> dict:
+    """``{cache key: entry}`` from disk ({} on missing/old-version file)."""
+    path = path or cache_path()
+    if not os.path.exists(path):
+        return {}
+    with open(path) as f:
+        blob = json.load(f)
+    if blob.get("version") != _CACHE_VERSION:
+        return {}
+    return blob.get("entries", {})
+
+
+def save_cache(entries: dict, path: str | None = None) -> str:
+    """Merge ``entries`` over the on-disk cache and write it back."""
+    path = path or cache_path()
+    merged = dict(load_cache(path))
+    merged.update(entries)
+    with open(path, "w") as f:
+        json.dump({"version": _CACHE_VERSION, "entries": merged}, f,
+                  indent=1, sort_keys=True)
+    return path
+
+
+def install(entries: dict) -> dict:
+    """Hand the current device kind's entries to
+    :func:`repro.kernels.ops.set_tuning` (replacing the installed
+    table); returns the installed ``{(family, backend, shape_class):
+    params}``.  Entries measured on other device kinds are skipped —
+    the whole point of keying the cache on the device."""
+    dk = device_kind()
+    table = {}
+    for key, entry in entries.items():
+        kind, family, backend, sc = key.split("|")
+        if kind == dk:
+            table[(family, backend, sc)] = dict(entry["params"])
+    kops.set_tuning(table)
+    return table
+
+
+def ensure(path: str | None = None, families=TUNE_FAMILIES,
+           backend: str | None = None, *, shapes: dict | None = None,
+           space: dict | None = None, reps: int = 3,
+           force: bool = False) -> dict:
+    """Load-or-tune: install cached entries for this device kind,
+    tuning (and persisting) any family that has no entry yet.  The
+    serving/bench entry point — one call makes dispatch tuned without
+    ever re-measuring on a machine that already has a cache."""
+    entries = {} if force else load_cache(path)
+    rb = kops.resolve_backend(backend)
+    have = {k.split("|")[1] for k in entries if k.split("|")[0] == device_kind()
+            and k.split("|")[2] == rb}
+    missing = [f for f in families if f not in have]
+    if missing:
+        entries = dict(entries,
+                       **tune(missing, backend, shapes=shapes, space=space,
+                              reps=reps))
+        save_cache(entries, path)
+    install(entries)
+    return entries
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny grid + tiny shapes; assert cache round-trip")
+    ap.add_argument("--families", nargs="*", default=list(TUNE_FAMILIES))
+    ap.add_argument("--backend", default=None)
+    ap.add_argument("--reps", type=int, default=3)
+    ap.add_argument("--cache", default=None,
+                    help="cache file (default: $REPRO_TUNING_CACHE or "
+                         "repo-root .tuning_cache.json)")
+    ap.add_argument("--force", action="store_true",
+                    help="re-measure even when the cache has entries")
+    args = ap.parse_args(argv)
+
+    shapes = SMOKE_SHAPES if args.smoke else None
+    space = SMOKE_SPACE if args.smoke else None
+    reps = 2 if args.smoke else args.reps
+    entries = tune(args.families, args.backend, shapes=shapes, space=space,
+                   reps=reps)
+    path = save_cache(entries, args.cache)
+    reloaded = load_cache(path)
+    for key, entry in entries.items():
+        assert reloaded[key] == json.loads(json.dumps(entry)), \
+            f"cache round-trip mismatch for {key}"
+    installed = install(reloaded)
+    print(f"tuned {len(entries)} entr{'y' if len(entries) == 1 else 'ies'} "
+          f"-> {path} (installed {len(installed)} for '{device_kind()}')")
+    for key, entry in sorted(entries.items()):
+        print(f"  {key:<52} {entry['us']:>9.1f}us "
+              f"({entry['speedup_vs_default']:.2f}x vs default "
+              f"{entry['default_us']:.1f}us) {entry['params']}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

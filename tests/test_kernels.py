@@ -101,3 +101,73 @@ def test_kernel_tile_padding(rng):
         t = ops.qo_update(qo.init(128, radius=0.2), jnp.array(x), jnp.array(x),
                           interpret=True)
         assert abs(float(qo.total_stats(t)["n"]) - n) < 1e-3
+
+
+# --------------------------------------------------------------------------
+# qo_update tile clamp: pad/clamp is a schedule, never a semantics, knob
+# --------------------------------------------------------------------------
+
+def test_qo_update_tile_clamp_formula():
+    """A batch whose pow-2 round-up fits one maximal tile is absorbed in
+    a SINGLE pass of exactly that round-up (floored at the 128-lane
+    alignment) no matter what tile was requested — the request is a
+    streaming cap for big batches, not a splitter for small ones.  The
+    old min(tile, round_up) clamp split B = 129 into two 128-passes
+    under tile=128 but one 256-pass otherwise: same math, different f32
+    merge order, different bits."""
+    assert ops.qo_update_tile(1, 1024) == 128
+    assert ops.qo_update_tile(127, 1024) == 128
+    assert ops.qo_update_tile(128, 1024) == 128
+    assert ops.qo_update_tile(129, 1024) == 256
+    assert ops.qo_update_tile(129, 128) == 256     # request ignored: 1 pass
+    assert ops.qo_update_tile(1024, 128) == 1024   # still single-pass
+    assert ops.qo_update_tile(4096, 1024) == 1024  # big B: requested cap
+    assert ops.qo_update_tile(4096, 512) == 512    # streaming cap honored
+
+
+@pytest.mark.parametrize("B", [1, 127, 128, 129])
+def test_qo_update_clamp_bit_identical_across_tiles(B, rng):
+    """B around the 128 boundary x every tile choice: the padded/clamped
+    update must be BIT-identical — the single-pass rule resolves every
+    request to the same one-tile schedule, and pad rows carry w = 0 and
+    vanish, so no tile choice may perturb a single bit."""
+    x = rng.normal(0.2, 1.3, B).astype(np.float32)
+    y = (x * 1.7 - 0.4).astype(np.float32)
+    t0 = qo.init(128, radius=0.15)
+    outs = []
+    for tile in (128, 256, 1024):
+        t = ops.qo_update(t0, jnp.array(x), jnp.array(y), tile=tile,
+                          interpret=True)
+        outs.append(jax.tree.leaves(t))
+    for leaves in outs[1:]:
+        for a, b in zip(outs[0], leaves):
+            np.testing.assert_array_equal(
+                np.asarray(a), np.asarray(b),
+                err_msg=f"B={B}: tile choice changed bits")
+
+
+def test_pallas_backend_falls_back_off_tpu(rng):
+    """backend="pallas" on a host with neither TPU nor GPU must run the
+    kernel under the interpreter (the multi-backend smoke contract) and
+    agree with the jnp lowering — not fail to compile."""
+    if jax.default_backend() in ("tpu", "gpu"):
+        pytest.skip("native kernel path exists here")
+    assert ops._kernel_interpret("pallas") is True
+    assert ops._kernel_interpret("interpret") is True
+    M, F, C, B = 16, 3, 8, 64
+    from repro.core import stats
+    ao_y = stats.init((M, F, C))
+    ao_sum_x = jnp.zeros((M, F, C))
+    ao_radius = jnp.full((M, F), 0.2, jnp.float32)
+    ao_origin = jnp.zeros((M, F), jnp.float32)
+    leaf = jnp.array(rng.integers(0, M, B), jnp.int32)
+    X = jnp.array(rng.normal(0, 1, (B, F)).astype(np.float32))
+    y = jnp.array(rng.normal(0, 1, B).astype(np.float32))
+    ky, ksx = ops.forest_update(ao_y, ao_sum_x, ao_radius, ao_origin,
+                                leaf, X, y, backend="pallas")
+    jy, jsx = ops.forest_update(ao_y, ao_sum_x, ao_radius, ao_origin,
+                                leaf, X, y, backend="jnp")
+    np.testing.assert_allclose(np.asarray(ky["n"]), np.asarray(jy["n"]),
+                               atol=1e-3)
+    np.testing.assert_allclose(np.asarray(ksx), np.asarray(jsx),
+                               rtol=1e-4, atol=1e-3)

@@ -1,0 +1,263 @@
+"""Perf layer: tuned dispatch is schedule-only, cached, and persistent.
+
+Three contracts (DESIGN.md §8):
+
+* **bit-identity** — ANY legal parameter tuple from the tuner's search
+  space, installed through ``ops.set_tuning``, produces bit-identical
+  outputs to the hard-coded defaults on every dispatchable backend
+  (tiles/ladders/rounding are a schedule, never a semantics, knob);
+* **no cache fragmentation** — tuned parameters resolve BEFORE the jit
+  key is formed: a tuning-table hit adds ZERO extra jit entries on
+  repeat dispatch, an empty table reproduces today's literal cache keys;
+* **persistence round-trip** — tune -> save -> load -> install restores
+  exactly the measured winners, filtered to the current device kind.
+"""
+import itertools
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import stats
+from repro.kernels import ops
+from repro.perf import tune as ptune
+
+
+@pytest.fixture(autouse=True)
+def _clean_tuning():
+    """Every test starts and ends untuned with cold dispatch caches."""
+    ops.set_tuning({})
+    ops.clear_jit_caches()
+    yield
+    ops.set_tuning({})
+    ops.clear_jit_caches()
+
+
+def _forest_inputs(rng, M=32, F=3, C=8, B=300):
+    ao_y = stats.init((M, F, C))
+    ao_sum_x = jnp.zeros((M, F, C))
+    ao_radius = jnp.full((M, F), 0.2, jnp.float32)
+    ao_origin = jnp.zeros((M, F), jnp.float32)
+    leaf = jnp.array(rng.integers(0, M, B), jnp.int32)
+    X = jnp.array(rng.normal(0, 1, (B, F)).astype(np.float32))
+    y = jnp.array(rng.normal(0, 1, B).astype(np.float32))
+    # one real update so the query sees populated tables
+    ao_y, ao_sum_x = ops.forest_update(ao_y, ao_sum_x, ao_radius, ao_origin,
+                                       leaf, X, y, backend="jnp")
+    attempt = jnp.array([i < M // 4 for i in range(M)])
+    return ao_y, ao_sum_x, ao_radius, ao_origin, leaf, X, y, attempt
+
+
+def _bits(tree):
+    return [np.asarray(leaf) for leaf in jax.tree.leaves(tree)]
+
+
+def _assert_same_bits(a, b, msg):
+    for x, y in zip(_bits(a), _bits(b)):
+        np.testing.assert_array_equal(x, y, err_msg=msg)
+
+
+# --------------------------------------------------------------------------
+# property: every search-space tuple is bit-identical to defaults
+# --------------------------------------------------------------------------
+
+def _space_tuples(family):
+    space = ptune.SEARCH_SPACE[family]
+    keys = sorted(space)
+    return [dict(zip(keys, combo))
+            for combo in itertools.product(*(space[k] for k in keys))]
+
+
+@pytest.mark.parametrize("backend", ["jnp", "interpret"])
+def test_every_search_space_tuple_bit_identical(backend, rng):
+    """The whole tuner grid, on both CPU-dispatchable backends: installing
+    any SEARCHABLE candidate changes performance only.  On the kernel
+    path the grid excludes the batch-streaming knobs by construction
+    (KERNEL_STREAM_KNOBS — they reorder the f32 Chan merge there), and
+    this test is exactly the contract that exclusion protects.  (The
+    interpret backend runs a reduced grid — the Pallas interpreter is
+    slow — but still covers every searchable knob's extremes via the
+    smoke space.)"""
+    w = ptune.make_workloads(**ptune.SMOKE_SHAPES)
+    space = ptune.SMOKE_SPACE if backend == "interpret" else None
+    for family in ptune.TUNE_FAMILIES:
+        run = ptune._runner(family, w, backend)
+        ops.set_tuning({})
+        ref = jax.block_until_ready(run())
+        tkey = (family, backend, w["shape_class"][family])
+        cands = ptune.candidates(family, space, backend=backend)
+        if backend == "interpret":
+            cands = cands[:4]
+        for cand in cands:
+            ops.set_tuning({tkey: cand})
+            out = jax.block_until_ready(run())
+            _assert_same_bits(ref, out, f"{family}/{backend}: {cand}")
+        ops.set_tuning({})
+
+
+def test_kernel_stream_knobs_pinned_on_kernel_path():
+    """The kernel-path grid never varies a stream knob, the jnp grid
+    does, and every family with a stream knob is covered by the map."""
+    for family, pinned in ptune.KERNEL_STREAM_KNOBS.items():
+        for knob in pinned:
+            default = ops.DEFAULT_PARAMS[family][knob]
+            kvals = {c[knob] for c in
+                     ptune.candidates(family, backend="interpret")}
+            assert kvals == {default}, (family, knob)
+            jvals = {c[knob] for c in ptune.candidates(family)}
+            assert len(jvals) > 1, (family, knob)
+
+
+def test_ladder_buckets_are_schedule_only(rng):
+    """pow2 vs pow2_half ladder on a public route dispatch around the
+    1024 boundary: identical leaf ids, different padded work."""
+    w = ptune.make_workloads(M=64, F=4, C=8, T=4, B=1100)
+    ref = np.asarray(ops.forest_route(*w["route"], depth=w["depth"],
+                                      backend="jnp"))
+    tkey = ("forest_route", "jnp", w["shape_class"]["forest_route"])
+    ops.set_tuning({tkey: {"batch_ladder": "pow2_half", "ply_round": 1}})
+    out = np.asarray(ops.forest_route(*w["route"], depth=w["depth"],
+                                      backend="jnp"))
+    np.testing.assert_array_equal(ref, out)
+    # and the half-step ladder really is the smaller bucket
+    assert ops._ladder_bucket(1100, 128, "pow2_half") == 1536
+    assert ops._ladder_bucket(1100, 128, "pow2") == 2048
+
+
+def test_ladder_bucket_properties():
+    """Any n: bucket >= n, bucket >= lo, half-ladder <= pow2 ladder, and
+    both ladders are monotone in n."""
+    prev_p, prev_h = 0, 0
+    for n in range(1, 5000, 37):
+        p = ops._ladder_bucket(n, 128, "pow2")
+        h = ops._ladder_bucket(n, 128, "pow2_half")
+        assert p >= n and h >= n and p >= 128 and h >= 128
+        assert h <= p
+        assert p >= prev_p and h >= prev_h
+        prev_p, prev_h = p, h
+
+
+def test_depth_bucket_round_to():
+    assert ops.depth_bucket(7) == 8            # historical even default
+    assert ops.depth_bucket(7, 1) == 7         # exact plies
+    assert ops.depth_bucket(7, 4) == 8
+    assert ops.depth_bucket(8, 4) == 8
+    assert ops.depth_bucket(9, 4) == 12
+    assert ops.depth_bucket(0, 2) == 0
+
+
+# --------------------------------------------------------------------------
+# no cache fragmentation: tuned params resolve before the jit key forms
+# --------------------------------------------------------------------------
+
+def test_tuning_hit_adds_zero_extra_jits(rng):
+    """Repeat dispatch with a tuning entry installed: the first call
+    compiles, every later same-bucket call is a pure cache hit — same
+    lru entry count, same inner-jit trace count."""
+    w = ptune.make_workloads(M=64, F=4, C=8, T=4, B=700)
+    tkey = ("forest_update", "jnp", w["shape_class"]["forest_update"])
+    ops.set_tuning({tkey: {"tile_b": 128, "batch_ladder": "pow2_half"}})
+    ops.forest_update(*w["update"], backend="jnp")
+    n_lru = ops._dispatch_cached.cache_info().currsize
+    handle = ops._jit_forest_update("jnp", 128, 128)
+    assert handle._cache_size() == 1
+    for _ in range(3):
+        ops.forest_update(*w["update"], backend="jnp")
+    assert ops._dispatch_cached.cache_info().currsize == n_lru, \
+        "tuning-table hit minted a new cached-jit factory entry"
+    assert handle._cache_size() == 1, "tuned dispatch retraced"
+
+
+def test_empty_tuning_reproduces_historical_cache_keys(rng):
+    """With no tuning installed the dispatch keys are exactly the
+    pre-perf-layer literals — the untuned-machines-bit-identical
+    contract, pinned against the historical constants."""
+    a = _forest_inputs(rng)
+    ops.forest_update(*a[:7], backend="jnp")
+    assert ops._jit_forest_update("jnp", 256, 128)._cache_size() == 1
+    ops.forest_best_splits(*a[:4], a[7], backend="jnp")
+    kpad = ops.query_buckets(32)[0]
+    assert ops._jit_forest_query("jnp", 128, kpad)._cache_size() == 1
+
+
+def test_explicit_argument_beats_tuning_entry(rng):
+    """A caller-passed tile wins over the installed entry (the explicit
+    override contract of ops.tuned)."""
+    w = ptune.make_workloads(M=64, F=4, C=8, T=4, B=300)
+    tkey = ("forest_update", "jnp", w["shape_class"]["forest_update"])
+    ops.set_tuning({tkey: {"tile_b": 512}})
+    assert ops.tuned("forest_update", "jnp",
+                     w["shape_class"]["forest_update"])["tile_b"] == 512
+    assert ops.tuned("forest_update", "jnp",
+                     w["shape_class"]["forest_update"],
+                     tile_b=128)["tile_b"] == 128
+    ops.forest_update(*w["update"], backend="jnp", tile_b=128)
+    assert ops._jit_forest_update("jnp", 128, 128)._cache_size() == 1
+
+
+def test_tuned_unknown_params_ignored():
+    ops.set_tuning({("forest_merge", "jnp", "X"): {"bogus": 7, "tile_r": 64}})
+    p = ops.tuned("forest_merge", "jnp", "X")
+    assert p == {"tile_r": 64}
+
+
+# --------------------------------------------------------------------------
+# tuner: measured search + cache round-trip
+# --------------------------------------------------------------------------
+
+def test_tuner_smoke_cache_round_trip(tmp_path, rng):
+    path = str(tmp_path / "cache.json")
+    key, entry = ptune.tune_family("forest_merge", "jnp",
+                                   shapes=ptune.SMOKE_SHAPES,
+                                   space=ptune.SMOKE_SPACE, reps=1, inner=1)
+    assert entry["params"] in ptune.candidates("forest_merge",
+                                               ptune.SMOKE_SPACE)
+    assert entry["speedup_vs_default"] > 0
+    ptune.save_cache({key: entry}, path)
+    reloaded = ptune.load_cache(path)
+    assert reloaded == {key: json.loads(json.dumps(entry))}
+    installed = ptune.install(reloaded)
+    fam, bk, sc = key.split("|")[1:]
+    assert installed == {(fam, bk, sc): entry["params"]}
+    assert ops.get_tuning() == installed
+
+
+def test_install_filters_foreign_device_kinds(tmp_path):
+    """An entry measured on another accelerator never steers this host."""
+    alien = "not-a-real-device|forest_merge|jnp|M8xF2xC4"
+    table = ptune.install({alien: {"params": {"tile_r": 64}}})
+    assert table == {} and ops.get_tuning() == {}
+
+
+def test_ensure_tunes_once_then_loads(tmp_path, rng, monkeypatch):
+    path = str(tmp_path / "cache.json")
+    calls = []
+    real = ptune.tune
+
+    def counting_tune(families, *a, **kw):
+        calls.append(tuple(families))
+        return real(families, *a, **kw)
+
+    monkeypatch.setattr(ptune, "tune", counting_tune)
+    kw = dict(families=("forest_merge",), backend="jnp",
+              shapes=ptune.SMOKE_SHAPES, space=ptune.SMOKE_SPACE, reps=1)
+    ptune.ensure(path, **kw)
+    assert calls == [("forest_merge",)]
+    ops.set_tuning({})
+    ptune.ensure(path, **kw)          # cache hit: no re-measure
+    assert calls == [("forest_merge",)]
+    assert ops.get_tuning() != {}
+
+
+def test_search_space_contains_defaults():
+    """The tuner can never lose to 'untuned' on the machine that tuned:
+    every family's grid includes the hard-coded default point, and every
+    DEFAULT_PARAMS knob appears in the family's space."""
+    for family, knobs in ptune.SEARCH_SPACE.items():
+        defaults = ops.DEFAULT_PARAMS[family]
+        assert set(knobs) == set(defaults), family
+        for k, v in defaults.items():
+            assert v in knobs[k], (family, k)
+        assert defaults in ptune.candidates(family)

@@ -18,7 +18,10 @@ kinds of check:
   rate on no-signal streams must stay ≤ its configured α while the
   Hoeffding backend's must still exceed it (the §2.7 premise), and the
   anytime drift-suite prequential MSE must stay within
-  ``false_splits.MAX_MSE_RATIO`` of the Hoeffding backend's.
+  ``false_splits.MAX_MSE_RATIO`` of the Hoeffding backend's; and the
+  sketch-observer suite (:mod:`benchmarks.sketch`, fixed seeds): every
+  gated stream's first split within the §2.8 ε-rank/merit bounds and
+  the ≥10x equivalent-capacity floor.
 
 * **roofline floors** — the analytic achieved-vs-attainable fraction
   from :mod:`benchmarks.roofline` must stay above a per-family floor for
@@ -68,15 +71,17 @@ import sys
 from benchmarks import engine as engine_bench
 from benchmarks import (false_splits, kernels, query_sweep, roofline,
                         serve)
+from benchmarks import sketch as sketch_bench
 from benchmarks.bench_io import REPO_ROOT, write_bench
 
 BASELINES = ("BENCH_kernels.json", "BENCH_query.json", "BENCH_serve.json",
              "BENCH_engine.json", "BENCH_splits.json",
-             "BENCH_roofline.json")
+             "BENCH_sketch.json", "BENCH_roofline.json")
 FRESH_ARTIFACT = "BENCH_query.fresh.json"
 SERVE_FRESH_ARTIFACT = "BENCH_serve.fresh.json"
 ENGINE_FRESH_ARTIFACT = "BENCH_engine.fresh.json"
 SPLITS_FRESH_ARTIFACT = "BENCH_splits.fresh.json"
+SKETCH_FRESH_ARTIFACT = "BENCH_sketch.fresh.json"
 ROOFLINE_FRESH_ARTIFACT = "BENCH_roofline.fresh.json"
 TOLERANCE = 3.0
 MIN_SPEEDUP = 1.5          # compacted vs full scan, same run, K/M <= 1/8
@@ -167,6 +172,11 @@ def main(argv=None) -> int:
     fsrows = false_splits.to_rows(fsreport)
     fresh.extend(fsrows)
     write_bench(SPLITS_FRESH_ARTIFACT, fsrows)
+    # sketch-observer merit/capacity suite (fixed seeds, same contract)
+    skreport = sketch_bench.run()
+    skrows = sketch_bench.to_rows(skreport)
+    fresh.extend(skrows)
+    write_bench(SKETCH_FRESH_ARTIFACT, skrows)
 
     failures = []
     print(f"{'row':<42} {'committed':>10} {'fresh':>10} {'ratio':>7}  verdict")
@@ -258,6 +268,9 @@ def main(argv=None) -> int:
          f"<= {false_splits.MAX_MSE_RATIO}",
          dr["mse_ratio"] <= false_splits.MAX_MSE_RATIO),
     ]
+    # sketch-observer gates: per-stream ε-rank / merit bounds plus the
+    # ≥10x equivalent-capacity floor (§2.8 error model, fixed seeds)
+    checks.extend(sketch_bench.gates(skreport))
     print(f"\n{'statistical gate':<42} {'value':>10} {'bound':>28}  verdict")
     for name, val, bound, ok in checks:
         print(f"{name:<42} {val:>10.3f} {bound:>28}  "

@@ -25,6 +25,7 @@ L.set_compute_dtype(jnp.float32)  # CPU container cannot execute bf16 dots
 
 from benchmarks import (aos, dp, engine, false_splits, forest,  # noqa: E402
                         kernels, query_sweep, roofline, serve, tree)
+from benchmarks import sketch as sketch_bench  # noqa: E402
 from benchmarks.bench_io import REPO_ROOT, write_bench  # noqa: E402
 
 
@@ -118,6 +119,14 @@ def _sec_splits(report, csv, args):
     write_bench("BENCH_splits.json", rows)
 
 
+def _sec_sketch(report, csv, args):
+    skrep = sketch_bench.run()
+    report["sketch"] = skrep
+    rows = sketch_bench.to_rows(skrep)
+    csv.extend(rows)
+    write_bench("BENCH_sketch.json", rows)
+
+
 def _profiled_kernels(report):
     """Per-op compiled-cost harvest + a BOUNDED profiler trace (one
     dispatch per family): the ``--profile`` artifacts (gitignored).
@@ -182,6 +191,7 @@ SECTIONS = {
     "engine": _sec_engine,
     "dp": _sec_dp,
     "splits": _sec_splits,
+    "sketch": _sec_sketch,
     "kernels": _sec_kernels,
     "query": _sec_query,
     "roofline": _sec_roofline,

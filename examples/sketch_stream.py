@@ -1,0 +1,64 @@
+"""Quantile-sketch observer vs dense QO tables on a heavy-tail stream
+(DESIGN.md §2.8).
+
+    PYTHONPATH=src python examples/sketch_stream.py
+
+Same tree, two observers: ``observer_backend="qo"`` keeps a dense
+(M, F, C) bin grid per leaf; ``observer_backend="sketch"`` keeps K
+rank-bucketed centroids per (leaf, feature) — O(K·F) state that places
+its candidate boundaries where the mass lives.  On a lognormal stream
+with 1% far outliers the sketch at K=16 slots BEATS the dense
+observer's prequential MSE (~3x here) while carrying 4x less observer
+state: the outliers stretch the grid's range so its fixed bins blur
+the bulk, while rank buckets are immune to range by construction
+(benchmarks/sketch.py quantifies this as the ≥10x equivalent-capacity
+gate).
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hoeffding as ht
+
+rng = np.random.default_rng(0)
+F, BS, STEPS = 4, 256, 80
+
+
+def batch():
+    X = rng.lognormal(0.0, 1.0, (BS, F))
+    out = rng.random((BS, F)) < 0.01                 # 1% far outliers
+    X = np.where(out, rng.uniform(1e3, 5e3, (BS, F)), X).astype(np.float32)
+    y = (np.where(X[:, 0] > 1.0, 2.0, 0.0) + np.log1p(X[:, 1])
+         + 0.1 * rng.normal(0, 1, BS)).astype(np.float32)
+    return jnp.array(X), jnp.array(y)
+
+
+runs = {}
+for observer in ("qo", "sketch"):
+    cfg = ht.HTRConfig(n_features=F, max_nodes=63, n_bins=64,
+                       grace_period=250, max_depth=8, r0=0.3,
+                       observer_backend=observer, sketch_k=16)
+    state = ht.init_state(cfg)
+    upd = jax.jit(functools.partial(ht.update, cfg))
+    pred = jax.jit(functools.partial(ht.predict, cfg))
+    slots = cfg.observer_bins()
+    print(f"observer={observer}: {slots} slots/(leaf,feature), "
+          f"{cfg.max_nodes * F * slots * 4 * 4 // 1024} KiB observer state")
+    rng = np.random.default_rng(7)                   # same stream per run
+    mses = []
+    for step in range(STEPS):
+        X, y = batch()
+        yhat = np.asarray(pred(state, X))            # test-then-train
+        mses.append(float(np.mean((np.asarray(y) - yhat) ** 2)))
+        state = upd(state, X, y)
+        if step % 20 == 19:
+            print(f"  step {step:3d}  prequential mse="
+                  f"{np.mean(mses[-20:]):7.3f}  "
+                  f"leaves={int(ht.n_leaves(state))}")
+    runs[observer] = np.mean(mses[STEPS // 2:])
+
+ratio = runs["sketch"] / runs["qo"]
+print(f"\nsecond-half prequential MSE: qo={runs['qo']:.3f}  "
+      f"sketch={runs['sketch']:.3f}  (ratio {ratio:.2f} at 4x less state)")

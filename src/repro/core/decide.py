@@ -150,10 +150,13 @@ def _anytime_want(cfg, state, merit, attempt):
                    0.0, 1.0)                                 # (M, F)
     # selection-corrected null mean: on pure noise the best of ~F*C
     # candidate boundaries explains ~log(F*C)/n of the variance by
-    # overfitting alone; real structure keeps eta bounded away from 0
+    # overfitting alone; real structure keeps eta bounded away from 0.
+    # C is the observer's slot count (n_bins dense, sketch_k sketched) —
+    # a K-slot sketch offers fewer candidate boundaries, and the
+    # correction must track the layout actually in play
     safe_n = jnp.maximum(n_leaf, 1.0)
     mu0 = E_MARGIN + E_SEL * jnp.log(float(max(cfg.n_features, 2)
-                                           * cfg.n_bins)) / safe_n
+                                           * cfg.observer_bins())) / safe_n
     dn = jnp.maximum(n_leaf - state["dec_n_last"], 0.0)      # fresh mass
     inc = dn[:, None] * (E_LAMBDA * (eta - mu0[:, None])
                          - E_LAMBDA * E_LAMBDA / 8.0)

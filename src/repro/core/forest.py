@@ -345,11 +345,20 @@ def _fused_absorb_tables(cfg: ForestConfig, ao_y, ao_sum_x, trees, gl,
     M = tcfg.max_nodes
     T = trees["feature"].shape[0]
     flat = functools.partial(_fold_tables, T=T, M=M)
-    ao_y, ao_sum_x = kops.forest_update(
-        jax.tree.map(flat, ao_y), flat(ao_sum_x),
-        flat(trees["ao_radius"]), flat(trees["ao_origin"]),
-        gl, jnp.tile(X, (T, 1)), jnp.tile(y, T), w.reshape(-1),
-        backend=tcfg.split_backend)
+    if tcfg.observer_backend == "sketch":
+        # the sketch needs no quantization grid — folded leaf ids alone
+        # segment the batch, so shard deltas stay mergeable by the rank
+        # contract instead of by a shared grid
+        ao_y, ao_sum_x = kops.sketch_update(
+            jax.tree.map(flat, ao_y), flat(ao_sum_x),
+            gl, jnp.tile(X, (T, 1)), jnp.tile(y, T), w.reshape(-1),
+            backend=tcfg.split_backend)
+    else:
+        ao_y, ao_sum_x = kops.forest_update(
+            jax.tree.map(flat, ao_y), flat(ao_sum_x),
+            flat(trees["ao_radius"]), flat(trees["ao_origin"]),
+            gl, jnp.tile(X, (T, 1)), jnp.tile(y, T), w.reshape(-1),
+            backend=tcfg.split_backend)
     unflat = lambda a: a.reshape((T, M) + a.shape[1:])
     return jax.tree.map(unflat, ao_y), unflat(ao_sum_x)
 
@@ -375,8 +384,11 @@ def _fused_member_attempt(cfg: ForestConfig, trees, feat_mask):
     def do(tr, att):
         # the folded T*M table axis compacts across trees: the ONE query
         # gathers only the attempting leaves of the whole ensemble
+        ao_y, ao_sum_x = jax.tree.map(flat, tr["ao_y"]), flat(tr["ao_sum_x"])
+        if tcfg.observer_backend == "sketch":
+            ao_y, ao_sum_x = kops.sketch_to_bins(ao_y, ao_sum_x)  # §2.8
         merit, thr = kops.forest_best_splits(
-            jax.tree.map(flat, tr["ao_y"]), flat(tr["ao_sum_x"]),
+            ao_y, ao_sum_x,
             flat(tr["ao_radius"]), flat(tr["ao_origin"]),
             att.reshape(-1), backend=tcfg.split_backend,
             compact=tcfg.compact_query)

@@ -87,8 +87,33 @@ class HTRConfig:
     # valid at every look — the right pairing for attempt_schedule="eager"
     decision_backend: str = "hoeffding"   # hoeffding | anytime
     alpha: float = 0.05           # anytime-valid false-split level
+    # attribute-observer layout (DESIGN.md §2.8): "qo" keeps the dense
+    # (M, F, C) bin planes (C = n_bins, the default — bit-identical to
+    # every pre-sketch release); "sketch" replaces them with K = sketch_k
+    # rank-bucket centroids per (leaf, feature) — O(K·F) state, bounded
+    # O(1/K) rank error on thresholds, same mergeability contract
+    observer_backend: str = "qo"  # qo | sketch
+    sketch_k: int = 16            # sketch capacity K (slots per table)
+
+    def observer_bins(self) -> int:
+        """Slot count of the observer's last table axis: ``n_bins`` under
+        the dense layout, ``sketch_k`` centroids under the sketch — the
+        ONE place state shapes and decision corrections read C from."""
+        return self.n_bins if self.observer_backend == "qo" else self.sketch_k
 
     def __post_init__(self):
+        if self.observer_backend not in ("qo", "sketch"):
+            raise ValueError(
+                f"observer_backend={self.observer_backend!r}: expected "
+                f"'qo' (dense bins) or 'sketch' (rank-bucket centroids)")
+        if self.observer_backend == "sketch" and self.split_backend == "oracle":
+            raise ValueError(
+                "observer_backend='sketch' has no oracle engine: the seed "
+                "path quantizes into dense bins; use split_backend in "
+                "('auto', 'pallas', 'interpret', 'jnp')")
+        if self.sketch_k < 2:
+            raise ValueError(f"sketch_k={self.sketch_k}: need >= 2 slots "
+                             f"for a split boundary to exist")
         if self.attempt_schedule not in ("grace", "eager"):
             raise ValueError(
                 f"attempt_schedule={self.attempt_schedule!r}: expected "
@@ -131,12 +156,18 @@ def init_state(cfg: HTRConfig) -> TreeState:
     ``n_nodes``    () i32         allocated node count
     =============  =============  ================================================
 
-    with ``M = cfg.max_nodes``, ``F = cfg.n_features``, ``C = cfg.n_bins``.
-    The ``dec_*`` decision-stage leaves are present under BOTH decision
-    backends (inert zeros under ``"hoeffding"``) so the treedef — and
-    every shape-keyed jit cache — is independent of ``decision_backend``.
+    with ``M = cfg.max_nodes``, ``F = cfg.n_features`` and
+    ``C = cfg.observer_bins()`` — ``n_bins`` dense QO bins under the
+    default observer, ``sketch_k`` rank-bucket centroids under
+    ``observer_backend="sketch"`` (same keys, same treedef; only the
+    last-axis length changes, and ``ao_radius``/``ao_origin`` ride inert
+    under the sketch so checkpoints and the §4.1 delta protocol are
+    layout-independent).  The ``dec_*`` decision-stage leaves are present
+    under BOTH decision backends (inert zeros under ``"hoeffding"``) so
+    the treedef — and every shape-keyed jit cache — is independent of
+    ``decision_backend``.
     """
-    M, F, C = cfg.max_nodes, cfg.n_features, cfg.n_bins
+    M, F, C = cfg.max_nodes, cfg.n_features, cfg.observer_bins()
     return {
         "feature": jnp.zeros((M,), jnp.int32),
         "threshold": jnp.zeros((M,), jnp.float32),
@@ -236,9 +267,14 @@ def _absorb_oracle(cfg: HTRConfig, state: TreeState, leaf, X, y, w) -> TreeState
 def _absorb(cfg: HTRConfig, state: TreeState, leaf, X, y, w) -> TreeState:
     if cfg.split_backend == "oracle":
         return _absorb_oracle(cfg, state, leaf, X, y, w)
-    ao_y, ao_sum_x = kops.forest_update(
-        state["ao_y"], state["ao_sum_x"], state["ao_radius"],
-        state["ao_origin"], leaf, X, y, w, backend=cfg.split_backend)
+    if cfg.observer_backend == "sketch":
+        ao_y, ao_sum_x = kops.sketch_update(
+            state["ao_y"], state["ao_sum_x"], leaf, X, y, w,
+            backend=cfg.split_backend)
+    else:
+        ao_y, ao_sum_x = kops.forest_update(
+            state["ao_y"], state["ao_sum_x"], state["ao_radius"],
+            state["ao_origin"], leaf, X, y, w, backend=cfg.split_backend)
     return dict(state, ao_y=ao_y, ao_sum_x=ao_sum_x)
 
 
@@ -449,8 +485,15 @@ def attempt_mask(cfg: HTRConfig, state: TreeState) -> jax.Array:
 
 def _do_attempts(cfg: HTRConfig, state: TreeState, attempt,
                  feat_mask=None) -> TreeState:
+    ao_y, ao_sum_x = state["ao_y"], state["ao_sum_x"]
+    if cfg.observer_backend == "sketch":
+        # densify-at-attempt-time adapter (§2.8): sorted centroids ARE a
+        # sorted bin table, so the §2.4 prefix-merge query — and with it
+        # decide.py, compaction and both decision backends — rides
+        # unchanged over the K-slot planes
+        ao_y, ao_sum_x = kops.sketch_to_bins(ao_y, ao_sum_x)
     merit, thr_all = kops.forest_best_splits(
-        state["ao_y"], state["ao_sum_x"], state["ao_radius"],
+        ao_y, ao_sum_x, state["ao_radius"],
         state["ao_origin"], attempt, backend=cfg.split_backend,
         compact=cfg.compact_query)
     return _apply_splits(cfg, state, merit, thr_all, attempt, feat_mask)

@@ -1,25 +1,50 @@
-"""Distributed QO sketches — the paper's variance algebra as a collective.
+"""Mergeable quantile sketches over the paper's (n, mean, M2) algebra.
 
-The Chan merge (paper Eqs. 4-5) is associative and commutative, so a set of
-per-device QO tables reduces across any mesh axis exactly like a psum —
-but over (n, mean, M2) triples, keeping Welford-grade accuracy.  This
-module provides:
+Two roles share this module, both built on the Chan merge (paper
+Eqs. 4-5) being associative and commutative:
 
-* :func:`all_merge` — merge same-shape QO tables across named mesh axes
-  (all_gather + log-depth pairwise tree merge, the numerically preferred
-  reduction order);
-* :func:`quantile` — approximate quantiles of the *observed x values* from
-  the bin occupancy (used by gradient compression to pick top-k thresholds
-  without sorting, DESIGN.md §4);
-* :func:`Sketch` helpers used by ``repro.train.monitor`` for per-step
-  telemetry of losses / grad norms / activation RMS.
+* **QO-table collectives + telemetry** (the original role, consumed by
+  ``repro.train.monitor`` and ``repro.optim.compress``):
+  :func:`all_merge` reduces same-shape QO tables across named mesh axes
+  (all_gather + log-depth pairwise tree merge) and :func:`quantile` /
+  :func:`summary` read approximate x-quantiles off the dense bin
+  occupancy — O(capacity) payload per step, independent of cluster size.
 
-Payload per step is O(capacity), independent of cluster size — the reason
-this scales to 1000+ nodes.
+* **The sketch attribute observer** (DESIGN.md §2.8, ROADMAP item 1):
+  a fixed-capacity rank-bucket centroid sketch that replaces the dense
+  (M, F, C) QO bin planes with O(K·F) per-leaf state when
+  ``HTRConfig(observer_backend="sketch")``.  Each (leaf, feature) slot
+  holds K weighted centroids — the SAME four planes as a QO bin
+  (target (n, mean, M2) + ``sum_x``) — kept in ascending-prototype
+  order, so the §2.4 prefix-merge VR query consumes them *unchanged*:
+  a sorted centroid list IS a sorted bin table with empties interleaved
+  (zero-weight slots are exact identities of the prefix scan).  The
+  jit-compatible primitives here (:func:`compact_planes`,
+  :func:`from_batch_planes`, :func:`merge_planes`) are the single
+  source of truth the :mod:`repro.kernels.ops` ``sketch_update`` /
+  ``sketch_merge`` dispatch families and their :mod:`repro.kernels.ref`
+  oracles lower.
+
+Sketch algebra (deterministic, trace-safe — no data-dependent shapes):
+
+* a **compaction** of J weighted centroids to K buckets sorts by
+  prototype (stable; empties carry +inf and sink to the tail), assigns
+  each centroid the bucket of its cumulative-weight *midpoint*
+  ``floor((cumw_i - n_i/2) · K / tot)``, and reduces each bucket with
+  the exact grouped two-pass form (Eqs. 6-7 algebra) — so bucket stats
+  are exact for the grouping, and only *which* centroids share a bucket
+  is approximate (rank error O(1/K) per merge level);
+* **merge(A, B)** concatenates the 2K centroids and compacts back to K
+  — same mergeability contract as the Chan table merge (any reduction
+  order, empty-operand safe), which is what lets the §4.1 DP sync and
+  checkpointing ride unchanged;
+* **update** pre-sketches the batch (per-leaf rank buckets over the
+  sorted rows) and merges — weight-0 rows vanish and the batch pad
+  ladder is bit-identical, exactly the QO weighted-absorption contract.
 """
 from __future__ import annotations
 
-from typing import Dict, Sequence
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -27,11 +52,23 @@ import jax.numpy as jnp
 from repro.core import stats
 from repro.core import qo as qo_lib
 
-__all__ = ["all_merge", "quantile", "summary"]
+__all__ = [
+    "all_merge", "quantile", "summary",
+    "SKTable", "init", "update", "merge", "best_split", "from_batch",
+    "quantile_sk", "total_stats", "n_slots",
+    "prototypes", "compact_planes", "from_batch_planes", "merge_planes",
+    "sort_planes",
+]
 
+SKTable = Dict[str, jax.Array]
+
+
+# --------------------------------------------------------------------------
+# QO-table collectives + telemetry (the original module surface)
+# --------------------------------------------------------------------------
 
 def all_merge(table: qo_lib.QOTable, axis_names) -> qo_lib.QOTable:
-    """Merge per-device tables across mesh axes (inside shard_map/pjit).
+    """Merge per-device QO tables across mesh axes (inside shard_map/pjit).
 
     Gathers the (n, mean, M2, sum_x) planes along ``axis_names`` and folds
     them with a log-depth pairwise Chan-merge tree.  ``sum_x`` is a plain
@@ -90,3 +127,242 @@ def summary(table: qo_lib.QOTable) -> Dict[str, jax.Array]:
         "p90": qs[1],
         "p99": qs[2],
     }
+
+
+# --------------------------------------------------------------------------
+# sketch-observer plane algebra (DESIGN.md §2.8) — the kernel-family core
+#
+# Planes are (..., J) arrays: ``n``/``mean``/``m2`` the per-centroid
+# target Stats, ``sum_x`` the prototype numerator.  Every function below
+# is jnp-traceable with static shapes, so the ops layer can jit/vmap it
+# and the forest can fold T·M tables into the leading axes.
+# --------------------------------------------------------------------------
+
+def prototypes(n: jax.Array, sum_x: jax.Array,
+               empty: float = jnp.inf) -> jax.Array:
+    """Per-centroid prototype ``sum_x / n`` with ``empty`` at n == 0 slots
+    (+inf by default, so a stable sort sinks empties to the tail)."""
+    return jnp.where(n > 0, sum_x / jnp.where(n > 0, n, 1.0), empty)
+
+
+def sort_planes(n, mean, m2, sum_x) -> Tuple[jax.Array, ...]:
+    """Stable-sort centroids along the last axis by ascending prototype
+    (empties last).  The defensive half of the densify-at-attempt
+    adapter: on well-formed sketch state this is the identity (slots are
+    kept rank-ordered by construction), but the query's correctness
+    contract — occupied slots in ascending-prototype order — is enforced
+    here rather than assumed."""
+    key = prototypes(n, sum_x)
+    _, n, mean, m2, sum_x = jax.lax.sort(
+        (key, n, mean, m2, sum_x), dimension=-1, num_keys=1, is_stable=True)
+    return n, mean, m2, sum_x
+
+
+def _bucket_ids(n_sorted: jax.Array, k_out: int) -> jax.Array:
+    """Rank buckets for already-sorted centroids: centroid i (inclusive
+    cumulative weight ``cumw_i``) lands in bucket
+    ``floor((cumw_i - n_i/2) * k_out / tot)`` — its weight-midpoint rank
+    scaled to K buckets.  Zero-weight slots get a valid (clipped) id and
+    contribute nothing to any bucket sum."""
+    cumw = jnp.cumsum(n_sorted, axis=-1)
+    tot = jnp.maximum(cumw[..., -1:], 1e-30)
+    mid = cumw - 0.5 * n_sorted
+    return jnp.clip((mid * (k_out / tot)).astype(jnp.int32), 0, k_out - 1)
+
+
+def _bucket_reduce(n, mean, m2, sum_x, bucket, k_out: int):
+    """Grouped exact two-pass reduction of sorted centroids into their
+    rank buckets — the compaction's compute stage (the piece
+    ``kernels/sketch_compact.py`` implements as a Pallas kernel).
+
+    Planes: (..., J); bucket: (..., J) i32 in [0, k_out).  Returns
+    (..., k_out) planes.  Pass 1 accumulates the linear sums (n, n·mean,
+    sum_x); pass 2 folds each centroid's m2 plus its squared distance to
+    the bucket mean — Chan's Eqs. 4-5 evaluated as one grouped two-pass
+    form, exact for the grouping and order-independent within a bucket.
+    """
+    lead = n.shape[:-1]
+    J = n.shape[-1]
+    R = 1
+    for d in lead:
+        R *= d
+    flat = lambda a: a.reshape(R, J)
+    nf, meanf, m2f, sxf, bf = map(flat, (n, mean, m2, sum_x, bucket))
+    seg = (jnp.arange(R, dtype=jnp.int32)[:, None] * k_out + bf).reshape(-1)
+    pay = jnp.stack([nf, nf * meanf, sxf], -1).reshape(-1, 3)
+    acc = jax.ops.segment_sum(pay, seg, R * k_out)
+    n_b, sy_b, sx_b = acc[:, 0], acc[:, 1], acc[:, 2]
+    mean_b = jnp.where(n_b > 0, sy_b / jnp.where(n_b > 0, n_b, 1.0), 0.0)
+    resid = m2f.reshape(-1) + nf.reshape(-1) * (
+        meanf.reshape(-1) - mean_b[seg]) ** 2
+    m2_b = jax.ops.segment_sum(resid, seg, R * k_out)
+    m2_b = jnp.where(n_b > 0, m2_b, 0.0)
+    out = lambda a: a.reshape(lead + (k_out,))
+    return out(n_b), out(mean_b), out(m2_b), out(sx_b)
+
+
+def compact_planes(n, mean, m2, sum_x, k_out: int):
+    """Compact (..., J) centroid planes to (..., k_out): sort by
+    prototype, rank-bucket by cumulative-weight midpoints, reduce each
+    bucket exactly.  Output slots are ascending-prototype by
+    construction (bucket order == rank order), with zero-weight buckets
+    wherever no mass landed — a valid sorted bin table for the §2.4
+    query."""
+    n, mean, m2, sum_x = sort_planes(n, mean, m2, sum_x)
+    bucket = _bucket_ids(n, k_out)
+    return _bucket_reduce(n, mean, m2, sum_x, bucket, k_out)
+
+
+def merge_planes(a_n, a_mean, a_m2, a_sum_x, b_n, b_mean, b_m2, b_sum_x):
+    """Merge two same-shape (..., K) sketches: concatenate the 2K
+    centroids and compact back to K.  Commutative (bitwise for distinct
+    prototypes — the stable sort sees the same sequence either way) and
+    associative within the sketch's O(1/K) rank error; the empty sketch
+    (all zeros) is an exact identity.  The §4.1 collective for
+    ``observer_backend="sketch"``."""
+    k = a_n.shape[-1]
+    cat = lambda a, b: jnp.concatenate([a, b], axis=-1)
+    return compact_planes(cat(a_n, b_n), cat(a_mean, b_mean),
+                          cat(a_m2, b_m2), cat(a_sum_x, b_sum_x), k)
+
+
+def from_batch_planes(leaf, X, y, w, n_tables: int, k: int):
+    """Pre-sketch one routed batch into per-(leaf, feature) rank buckets.
+
+    leaf: (B,) i32 routed table ids (−1 = dropped pad row); X: (B, F);
+    y/w: (B,).  Returns (n_tables, F, k) planes: per feature the rows
+    sort by (leaf, x) — one ``lax.sort`` per feature axis, vectorized —
+    each row's within-leaf cumulative-weight midpoint picks its bucket,
+    and the buckets reduce with the exact two-pass form.  Weight-0 rows
+    vanish (their midpoint is degenerate but their payload is zero), so
+    the dispatch ladders' pad rows are exact no-ops, bit for bit.
+    """
+    B, F = X.shape
+    # dropped rows must be weightless BEFORE the cumulative sums: they
+    # sort to the front of every leaf run, and any mass they carried
+    # would inflate each real row's within-leaf rank (the dispatch
+    # ladders already pad at w = 0; this makes the contract hold for any
+    # caller that marks rows dropped without zeroing their weight)
+    w = jnp.where(leaf >= 0, w, 0.0)
+    leaf = jnp.broadcast_to(leaf[None, :], (F, B))
+    xT = X.T                                       # (F, B)
+    yF = jnp.broadcast_to(y[None, :], (F, B))
+    wF = jnp.broadcast_to(w[None, :], (F, B))
+    leaf_s, x_s, y_s, w_s = jax.lax.sort(
+        (leaf, xT, yF, wF), dimension=-1, num_keys=2, is_stable=True)
+
+    # within-leaf inclusive cumulative weight: global cumsum minus the
+    # total mass of every smaller leaf id (rows are leaf-major after the
+    # sort; pad rows leaf = −1 sort first and carry zero weight)
+    tot_l = jax.ops.segment_sum(
+        jnp.where(leaf[0] >= 0, w, 0.0), jnp.maximum(leaf[0], 0), n_tables)
+    offset = jnp.cumsum(tot_l) - tot_l             # (n_tables,)
+    safe_leaf = jnp.clip(leaf_s, 0, n_tables - 1)
+    cumw = jnp.cumsum(w_s, axis=-1) - offset[safe_leaf]
+    tot = jnp.maximum(tot_l[safe_leaf], 1e-30)
+    mid = cumw - 0.5 * w_s
+    bucket = jnp.clip((mid * (k / tot)).astype(jnp.int32), 0, k - 1)
+
+    # flat segment reduce over (leaf, feature, bucket); negative leaf
+    # rows produce negative segments and are dropped by the scatter
+    frow = jnp.broadcast_to(jnp.arange(F, dtype=jnp.int32)[:, None], (F, B))
+    seg = ((leaf_s * F + frow) * k + bucket).reshape(-1)
+    wf, yf, xf = w_s.reshape(-1), y_s.reshape(-1), x_s.reshape(-1)
+    num = n_tables * F * k
+    pay = jnp.stack([wf, wf * yf, wf * xf], -1)
+    acc = jax.ops.segment_sum(pay, seg, num)
+    n_b, sy_b, sx_b = acc[:, 0], acc[:, 1], acc[:, 2]
+    mean_b = jnp.where(n_b > 0, sy_b / jnp.where(n_b > 0, n_b, 1.0), 0.0)
+    segc = jnp.clip(seg, 0, num - 1)
+    m2_b = jax.ops.segment_sum(
+        jnp.where(seg >= 0, wf * (yf - mean_b[segc]) ** 2, 0.0), segc, num)
+    m2_b = jnp.where(n_b > 0, m2_b, 0.0)
+    shp = (n_tables, F, k)
+    return (n_b.reshape(shp), mean_b.reshape(shp), m2_b.reshape(shp),
+            sx_b.reshape(shp))
+
+
+# --------------------------------------------------------------------------
+# single-table reference surface (the tests' and ref-oracles' vocabulary)
+# --------------------------------------------------------------------------
+
+def init(k: int) -> SKTable:
+    """Empty K-centroid sketch: ``{"sum_x": (K,), "y": Stats (K,)}`` —
+    the same plane names as a QO table (minus the grid scalars), so the
+    tree state swaps layouts without changing its treedef key set."""
+    return {"sum_x": jnp.zeros((k,), jnp.float32), "y": stats.init((k,))}
+
+
+def _planes(t: SKTable):
+    return t["y"]["n"], t["y"]["mean"], t["y"]["m2"], t["sum_x"]
+
+
+def _table(n, mean, m2, sum_x) -> SKTable:
+    return {"sum_x": sum_x, "y": {"n": n, "mean": mean, "m2": m2}}
+
+
+def from_batch(x, y, w=None, *, k: int) -> SKTable:
+    """Sketch one weighted batch from scratch (single table)."""
+    x = jnp.asarray(x, jnp.float32).reshape(-1)
+    y = jnp.asarray(y, jnp.float32).reshape(-1)
+    w = jnp.ones_like(x) if w is None \
+        else jnp.asarray(w, jnp.float32).reshape(-1)
+    X = x[:, None]
+    leaf = jnp.zeros_like(x, dtype=jnp.int32)
+    n, mean, m2, sum_x = from_batch_planes(leaf, X, y, w, 1, k)
+    return _table(n[0, 0], mean[0, 0], m2[0, 0], sum_x[0, 0])
+
+
+def update(table: SKTable, x, y, w=None) -> SKTable:
+    """Fold a weighted batch into the sketch: pre-sketch the batch at the
+    table's own capacity, then :func:`merge` (one compaction per batch —
+    there is no streaming inner Chan merge, so no stream-order knob
+    exists for the tuner to pin)."""
+    k = table["sum_x"].shape[-1]
+    return merge(table, from_batch(x, y, w, k=k))
+
+
+def merge(a: SKTable, b: SKTable) -> SKTable:
+    """Merge two same-capacity sketches (see :func:`merge_planes`)."""
+    return _table(*merge_planes(*_planes(a), *_planes(b)))
+
+
+def best_split(table: SKTable) -> qo_lib.SplitResult:
+    """Variance-reduction best split over the sketch's centroid
+    boundaries — :func:`repro.core.qo.best_split` verbatim on the sorted
+    centroids (a sorted centroid list is a sorted bin table; the grid
+    scalars are inert there)."""
+    n, mean, m2, sum_x = sort_planes(*_planes(table))
+    return qo_lib.best_split({
+        "radius": jnp.float32(1.0), "origin": jnp.float32(0.0),
+        "sum_x": sum_x, "y": {"n": n, "mean": mean, "m2": m2}})
+
+
+def quantile_sk(table: SKTable, q) -> jax.Array:
+    """Approximate q-quantile(s) of the sketched x values, read off the
+    centroid CDF (rank error O(1/K) per compaction level — the bound the
+    property harness measures)."""
+    q = jnp.atleast_1d(jnp.asarray(q, jnp.float32))
+    n, _, _, sum_x = sort_planes(*_planes(table))
+    proto = prototypes(n, sum_x, empty=0.0)
+    cum = jnp.cumsum(n)
+    total = jnp.maximum(cum[-1], 1e-30)
+
+    def one(qi):
+        pos = jnp.searchsorted(cum, qi * total)
+        return proto[jnp.clip(pos, 0, n.shape[0] - 1)]
+
+    out = jax.vmap(one)(q)
+    return out[0] if out.shape == (1,) else out
+
+
+def total_stats(table: SKTable) -> stats.Stats:
+    """Whole-sample target statistics (merge of every centroid) — exact:
+    bucket grouping never loses mass, so this matches the dense QO
+    table's total bit-for-bit up to f32 reduction order."""
+    return stats.tree_reduce_merge(table["y"], axis=0)
+
+
+def n_slots(table: SKTable) -> jax.Array:
+    """Occupied centroids — the sketch's |H| memory metric."""
+    return (table["y"]["n"] > 0).sum()

@@ -75,10 +75,14 @@ from repro.kernels.qo_route import (
     fold_route_tables, pack_route_attrs, qo_route_pallas)
 from repro.kernels.qo_merge import (
     pack_merge_planes, unpack_merge_planes, qo_merge_pallas)
+from repro.core import sketch as sketch_lib
+from repro.kernels.sketch_compact import (
+    pack_compact_planes, unpack_compact_planes, sketch_compact_pallas)
 
 __all__ = [
     "qo_update", "qo_best_split", "default_interpret", "resolve_backend",
     "forest_bin_ids", "forest_update", "forest_best_splits", "forest_merge",
+    "sketch_update", "sketch_merge", "sketch_to_bins",
     "route", "forest_route", "depth_bucket",
     "query_buckets", "clear_jit_caches", "QUERY_MIN_BUCKET",
     "set_tuning", "get_tuning", "tuned", "DEFAULT_PARAMS",
@@ -125,6 +129,8 @@ DEFAULT_PARAMS = {
     "forest_query": {"tile_m": 128, "min_bucket": 8},
     "forest_route": {"tile_b": 256, "batch_ladder": "pow2", "ply_round": 2},
     "forest_merge": {"tile_r": 256},
+    "sketch_update": {"tile_r": 256, "batch_ladder": "pow2"},
+    "sketch_merge": {"tile_r": 256},
 }
 
 # (family, backend, shape_class) -> {param: value} overrides.  Kept
@@ -907,3 +913,166 @@ def forest_best_splits(ao_y, ao_sum_x, ao_radius, ao_origin, attempt, *,
     kpad = buckets[bisect.bisect_left(buckets, K)]
     return _jit_forest_query(backend, tile_m, None if kpad == M else kpad)(
         ao_y, ao_sum_x, ao_radius, ao_origin, attempt)
+
+
+# --------------------------------------------------------------------------
+# sketch-observer ops (DESIGN.md §2.8): O(K·F) per-leaf state for massive F·C
+# --------------------------------------------------------------------------
+
+def _sketch_compact_backend(n, mean, m2, sum_x, k_out: int, *, backend: str,
+                            tile_r: int):
+    """Backend body of one compaction: the prototype sort + rank-bucket
+    assignment is pure jnp on EVERY backend (sort networks don't pay
+    their way in a hand kernel — same reasoning as the route fold), and
+    only the grouped bucket reduction dispatches to the Pallas kernel or
+    its fused ``segment_sum`` twin.  ``tile_r`` tiles the flattened
+    table axis on the kernel path only — schedule-only there (rows are
+    independent), and the jnp lowering ignores it, so unlike the
+    streaming ``tile_b`` there is NO bit-sensitive stream knob for the
+    tuner to pin in this family (a compaction reduces each bucket once;
+    there is no sequential Chan merge across tiles)."""
+    if backend == "jnp":
+        return sketch_lib.compact_planes(n, mean, m2, sum_x, k_out)
+    n, mean, m2, sum_x = sketch_lib.sort_planes(n, mean, m2, sum_x)
+    bucket = sketch_lib._bucket_ids(n, k_out)
+    lead = n.shape[:-1]
+    R = 1
+    for d in lead:
+        R *= d
+    tile_r = min(tile_r, round_up(R, 8))
+    dense = sketch_compact_pallas(
+        pack_compact_planes(n, mean, m2, sum_x, bucket, tile_r=tile_r),
+        k_out=k_out, tile_r=tile_r, interpret=_kernel_interpret(backend))
+    return unpack_compact_planes(dense, lead, k_out)
+
+
+def _cat_planes(a_y, a_sum_x, b_y, b_sum_x):
+    cat = lambda a, b: jnp.concatenate([a, b], axis=-1)
+    return (cat(a_y["n"], b_y["n"]), cat(a_y["mean"], b_y["mean"]),
+            cat(a_y["m2"], b_y["m2"]), cat(a_sum_x, b_sum_x))
+
+
+def _sketch_merge_impl(a_y, a_sum_x, b_y, b_sum_x, *, backend: str,
+                       tile_r: int):
+    """Backend dispatch body of :func:`sketch_merge`: concatenate the 2K
+    centroids and compact back to K."""
+    k = a_sum_x.shape[-1]
+    n, mean, m2, sum_x = _sketch_compact_backend(
+        *_cat_planes(a_y, a_sum_x, b_y, b_sum_x), k,
+        backend=backend, tile_r=tile_r)
+    return {"n": n, "mean": mean, "m2": m2}, sum_x
+
+
+@register_jit_cache
+@functools.lru_cache(maxsize=None)
+def _jit_sketch_merge(backend: str, tile_r: int):
+    """Keyed handle for the sketch merge's cached jit (the
+    ``_cache_size`` regression hook); delegates to :func:`_dispatch`."""
+    return _dispatch(_sketch_merge_impl, backend=backend, tile_r=tile_r)
+
+
+def sketch_merge(a_y, a_sum_x, b_y, b_sum_x, *, backend: str | None = None,
+                 tile_r: int | None = None):
+    """Merge two same-shape sketch-observer table sets (DESIGN.md §2.8).
+
+    a_y/b_y: Stats dicts of (N, F, K); a_sum_x/b_sum_x: (N, F, K) — N is
+    any table-axis length (a tree's M, a forest's folded T·M, or a
+    gathered shard stack reshaped in), K the sketch capacity.  Returns
+    the merged ``(ao_y, ao_sum_x)``: the 2K concatenated centroids
+    rank-compacted back to K (exact bucket statistics; O(1/K) rank error
+    in which centroids share a bucket).  Same mergeability contract as
+    :func:`forest_merge` — commutative (bitwise for distinct
+    prototypes), associative within the rank bound, empty-operand exact
+    — so the §4.1 DP sync and checkpointing swap this in for the Chan
+    table merge with no protocol change.  The positional signature
+    matches :func:`forest_merge` on purpose; the elementwise Chan merge
+    would be WRONG here (slot i of two sketches covers different rank
+    ranges), which is why the observer backend must select the family.
+
+    Called with concrete arrays this dispatches through a cached jit;
+    under an enclosing trace it inlines.  ``tile_r`` (None: tuned,
+    default 256) is schedule-only on every backend — no stream knob
+    exists in this family (see :func:`_sketch_compact_backend`).
+    """
+    backend = resolve_backend(backend)
+    N, F, K = a_sum_x.shape
+    tile_r = tuned("sketch_merge", backend, _shape_class_tables(N, F, K),
+                   tile_r=tile_r)["tile_r"]
+    if _is_traced(a_y, a_sum_x, b_y, b_sum_x):
+        return _sketch_merge_impl(a_y, a_sum_x, b_y, b_sum_x,
+                                  backend=backend, tile_r=tile_r)
+    return _jit_sketch_merge(backend, tile_r)(a_y, a_sum_x, b_y, b_sum_x)
+
+
+def _sketch_update_impl(ao_y, ao_sum_x, leaf, X, y, w, *, backend: str,
+                        tile_r: int):
+    """Backend dispatch body of :func:`sketch_update`: pre-sketch the
+    routed batch into per-(leaf, feature) rank buckets (pure jnp on all
+    backends — it is sorts and one segment reduction), then merge the
+    batch sketch into the running state via the compaction backend."""
+    M, F, K = ao_sum_x.shape
+    b_n, b_mean, b_m2, b_sx = sketch_lib.from_batch_planes(leaf, X, y, w, M, K)
+    return _sketch_merge_impl(
+        ao_y, ao_sum_x, {"n": b_n, "mean": b_mean, "m2": b_m2}, b_sx,
+        backend=backend, tile_r=tile_r)
+
+
+@register_jit_cache
+@functools.lru_cache(maxsize=None)
+def _jit_sketch_update(backend: str, tile_r: int):
+    """Keyed handle for the sketch absorb's cached jit; delegates to the
+    shared :func:`_dispatch`."""
+    return _dispatch(_sketch_update_impl, backend=backend, tile_r=tile_r)
+
+
+def sketch_update(ao_y, ao_sum_x, leaf, X, y, w=None, *,
+                  backend: str | None = None, tile_r: int | None = None):
+    """Absorb a routed batch into every (leaf, feature) sketch.
+
+    ao_y: Stats dict of (M, F, K); ao_sum_x: (M, F, K); leaf: (B,) i32
+    routed leaf ids (-1 rows vanish); X: (B, F); y: (B,); w: optional
+    (B,) f32 sample weights (default 1) — weight-0 rows vanish and the
+    batch pad ladder is bit-identical (pad rows never touch a bucket),
+    the same contract as :func:`forest_update`.  Returns the merged
+    ``(ao_y, ao_sum_x)``.  One batch is ONE compaction (batch pre-sketch
+    + merge) — there is no per-tile streaming, so every ``tile_r`` and
+    ladder choice is bit-identical on every backend.
+
+    Called with concrete arrays this dispatches through a cached jit
+    with the batch padded to its ladder bucket; under an enclosing trace
+    it inlines so the caller's jit fuses the whole absorb stage.
+    """
+    backend = resolve_backend(backend)
+    leaf = jnp.asarray(leaf, jnp.int32).reshape(-1)
+    X = jnp.asarray(X, jnp.float32)
+    y = jnp.asarray(y, jnp.float32).reshape(-1)
+    w = jnp.ones_like(y) if w is None else jnp.asarray(w, jnp.float32).reshape(-1)
+    M, F, K = ao_sum_x.shape
+    p = tuned("sketch_update", backend, _shape_class_tables(M, F, K),
+              tile_r=tile_r)
+    if _is_traced(ao_y, ao_sum_x, leaf, X, y, w):
+        return _sketch_update_impl(ao_y, ao_sum_x, leaf, X, y, w,
+                                   backend=backend, tile_r=p["tile_r"])
+    leaf, X, y, w = _pad_batch(
+        leaf, X, y, w, _ladder_bucket(X.shape[0], 128, p["batch_ladder"]))
+    return _jit_sketch_update(backend, p["tile_r"])(
+        ao_y, ao_sum_x, leaf, X, y, w)
+
+
+def sketch_to_bins(ao_y, ao_sum_x):
+    """Densify-at-attempt-time adapter: sketch state -> query-ready bins.
+
+    A sketch's K centroids in ascending-prototype order ARE a valid
+    sorted bin table — zero-weight slots are exact identities of the
+    §2.4 prefix merge — so "densify" is a defensive stable sort along
+    the slot axis (the identity on well-formed state, which
+    :func:`sketch_update`/:func:`sketch_merge` keep rank-ordered by
+    construction) and :func:`forest_best_splits` consumes the result
+    unchanged on every backend.  Pure jnp everywhere (a sort is not a
+    profitable hand kernel) and cheap enough to inline at attempt time;
+    it takes no backend/tile knobs, so the observer choice can never
+    reach a kernel cache key through this adapter.
+    """
+    n, mean, m2, sum_x = sketch_lib.sort_planes(
+        ao_y["n"], ao_y["mean"], ao_y["m2"], ao_sum_x)
+    return {"n": n, "mean": mean, "m2": m2}, sum_x

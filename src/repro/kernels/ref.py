@@ -88,6 +88,50 @@ def forest_merge_ref(a_y, a_sum_x, b_y, b_sum_x):
     return new_y, stackf(lambda t: t["sum_x"])
 
 
+def sketch_update_ref(ao_y, ao_sum_x, leaf, X, y, w=None):
+    """Oracle for the sketch absorb: per-(leaf, feature) single-table
+    :func:`repro.core.sketch.update` with the batch masked to the rows
+    routed to that leaf.  Loops tables in Python and exercises the
+    single-table path (no cross-leaf offset arithmetic), so it is an
+    independent witness for the batched pre-sketch — slow, unambiguous.
+    """
+    from repro.core import sketch as sk
+    M, F, K = ao_sum_x.shape
+    y = jnp.asarray(y, jnp.float32).reshape(-1)
+    w = jnp.ones_like(y) if w is None else jnp.asarray(w, jnp.float32)
+
+    def one(m, f):
+        t = {"sum_x": ao_sum_x[m, f],
+             "y": jax.tree.map(lambda a: a[m, f], ao_y)}
+        sel = (leaf == m).astype(jnp.float32) * w
+        return sk.update(t, X[:, f], y, sel)
+
+    tables = [[one(m, f) for f in range(F)] for m in range(M)]
+    stackf = lambda getter: jnp.stack(
+        [jnp.stack([getter(tables[m][f]) for f in range(F)]) for m in range(M)])
+    new_y = {k: stackf(lambda t, k=k: t["y"][k]) for k in ("n", "mean", "m2")}
+    return new_y, stackf(lambda t: t["sum_x"])
+
+
+def sketch_merge_ref(a_y, a_sum_x, b_y, b_sum_x):
+    """Oracle for the sketch merge: per-table single-table
+    :func:`repro.core.sketch.merge` over a Python loop of the (N, F)
+    grid — slow, unambiguous."""
+    from repro.core import sketch as sk
+    N, F, _ = a_sum_x.shape
+
+    def one(n, f):
+        pick = lambda ao_y, ao_sx: {
+            "sum_x": ao_sx[n, f], "y": jax.tree.map(lambda a: a[n, f], ao_y)}
+        return sk.merge(pick(a_y, a_sum_x), pick(b_y, b_sum_x))
+
+    tables = [[one(n, f) for f in range(F)] for n in range(N)]
+    stackf = lambda getter: jnp.stack(
+        [jnp.stack([getter(tables[n][f]) for f in range(F)]) for n in range(N)])
+    new_y = {k: stackf(lambda t, k=k: t["y"][k]) for k in ("n", "mean", "m2")}
+    return new_y, stackf(lambda t: t["sum_x"])
+
+
 def route_ref(feature, threshold, child, is_leaf, X, max_depth: int):
     """Oracle for the batched routing kernel: the seed's vmap-of-scalar
     ``fori_loop`` walk, preserved verbatim (per-row dependent gathers

@@ -76,6 +76,9 @@ SEARCH_SPACE = {
                      "batch_ladder": ("pow2", "pow2_half"),
                      "ply_round": (1, 2, 4)},
     "forest_merge": {"tile_r": (64, 128, 256, 512)},
+    "sketch_update": {"tile_r": (64, 128, 256, 512),
+                      "batch_ladder": ("pow2", "pow2_half")},
+    "sketch_merge": {"tile_r": (64, 128, 256, 512)},
 }
 
 #: Knobs that are NOT searchable on the kernel path ("pallas" /
@@ -88,6 +91,11 @@ SEARCH_SPACE = {
 KERNEL_STREAM_KNOBS = {
     "forest_update": ("tile_b",),
     "qo_update": ("tile",),
+    # the sketch families deliberately have NO entry: a batch is absorbed
+    # as ONE compaction (batch pre-sketch + rank-bucket merge), so no
+    # knob sets a sequential per-tile Chan-merge width — ``tile_r`` only
+    # tiles independent table rows and every value is bit-identical on
+    # every backend (asserted by the tuner's identity gate).
 }
 
 #: The families :func:`tune` covers by default: the forest-scale hot
@@ -95,7 +103,7 @@ KERNEL_STREAM_KNOBS = {
 #: the Pallas path (interpreter off-TPU), so racing it on a CPU host
 #: measures the interpreter, not a schedule.
 TUNE_FAMILIES = ("forest_update", "forest_query", "forest_route",
-                 "forest_merge")
+                 "forest_merge", "sketch_update", "sketch_merge")
 
 #: Two-candidates-per-knob truncation for the CI smoke: exercises the
 #: full tune -> assert-bit-identity -> save -> load -> install loop in
@@ -197,11 +205,17 @@ def make_workloads(M: int = 256, F: int = 8, C: int = 16, T: int = 8,
         "query": (ao_y, ao_sum_x, ao_radius, ao_origin, attempt),
         "route": (feature, threshold, child, is_leaf, X),
         "merge": (ao_y, ao_sum_x, ao_y, ao_sum_x),
+        # the sketch families reuse the same occupancy-mixed planes with
+        # the C axis read as K slots (the ops sort them into rank order
+        # themselves, so arbitrary plane contents are a legal workload)
+        "sketch_update": (ao_y, ao_sum_x, leaf, X, y),
+        "sketch_merge": (ao_y, ao_sum_x, ao_y, ao_sum_x),
         "qo": (table, xs, y),
         "depth": depth,
         "shape_class": {
             "forest_update": tabs, "forest_query": tabs,
             "forest_merge": tabs,
+            "sketch_update": tabs, "sketch_merge": tabs,
             "forest_route": kops._shape_class_route(T, M, F),
             "qo_update": f"C{C}",
         },
@@ -221,6 +235,12 @@ def _runner(family: str, w: dict, backend: str):
                                          backend=backend)
     if family == "forest_merge":
         return lambda: kops.forest_merge(*w["merge"], backend=backend)
+    if family == "sketch_update":
+        return lambda: kops.sketch_update(*w["sketch_update"],
+                                          backend=backend)
+    if family == "sketch_merge":
+        return lambda: kops.sketch_merge(*w["sketch_merge"],
+                                         backend=backend)
     if family == "qo_update":
         return lambda: kops.qo_update(*w["qo"])
     raise KeyError(family)

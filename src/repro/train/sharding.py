@@ -364,7 +364,8 @@ def _dp_init_delta(fcfg, n_shards: int):
     from repro.core import stats
 
     t = fcfg.tree
-    D, T, M, F, C = n_shards, fcfg.n_trees, t.max_nodes, t.n_features, t.n_bins
+    D, T, M, F = n_shards, fcfg.n_trees, t.max_nodes, t.n_features
+    C = t.observer_bins()
     return {
         "ystats": stats.init((D, T, M)),
         "ao_y": stats.init((D, T, M, F, C)),
@@ -471,12 +472,17 @@ def _dp_reduce_deltas(fcfg, delta):
     from repro.kernels import ops as kops
 
     backend = fcfg.tree.split_backend
-    F, C = fcfg.tree.n_features, fcfg.tree.n_bins
+    F, C = fcfg.tree.n_features, fcfg.tree.observer_bins()
+    # the sketch's rank-bucket merge replaces the elementwise Chan merge
+    # (slot i of two sketches covers different rank ranges); the protocol
+    # — fold, pairwise-halve, unfold — is identical (§2.8)
+    table_merge = kops.sketch_merge \
+        if fcfg.tree.observer_backend == "sketch" else kops.forest_merge
 
     def merge_pair(a, b):
         h = a["ao_sum_x"].shape[0] * a["ao_sum_x"].shape[1]
         fold = lambda x: x.reshape((h * fcfg.tree.max_nodes, F, C))
-        ao_y, ao_sum_x = kops.forest_merge(
+        ao_y, ao_sum_x = table_merge(
             jax.tree.map(fold, a["ao_y"]), fold(a["ao_sum_x"]),
             jax.tree.map(fold, b["ao_y"]), fold(b["ao_sum_x"]),
             backend=backend)
@@ -522,14 +528,16 @@ def _dp_apply_sync(fcfg, forest, merged):
     from repro.kernels import ops as kops
 
     T, M = fcfg.n_trees, fcfg.tree.max_nodes
-    F, C = fcfg.tree.n_features, fcfg.tree.n_bins
+    F, C = fcfg.tree.n_features, fcfg.tree.observer_bins()
+    table_merge = kops.sketch_merge \
+        if fcfg.tree.observer_backend == "sketch" else kops.forest_merge
     trees = forest["trees"]
     trees = dict(trees,
                  ystats=stats.merge(trees["ystats"], merged["ystats"]),
                  seen_since_attempt=trees["seen_since_attempt"]
                  + merged["ystats"]["n"])
     fold = lambda x: x.reshape((T * M, F, C))
-    ao_y, ao_sum_x = kops.forest_merge(
+    ao_y, ao_sum_x = table_merge(
         jax.tree.map(fold, trees["ao_y"]), fold(trees["ao_sum_x"]),
         jax.tree.map(fold, merged["ao_y"]), fold(merged["ao_sum_x"]),
         backend=fcfg.tree.split_backend)

@@ -1,0 +1,604 @@
+"""Sketch-observer contract: core/sketch.py + the ``observer_backend``
+knob (DESIGN.md §2.8).
+
+Four pillars, mirroring tests/test_decide.py's structure:
+
+* **Mergeability algebra** — the sketch merge is commutative (bitwise on
+  distinct prototypes, the stable-sort guarantee), associative within
+  the documented rank-error bound, and ``merge(A, B)`` agrees with a
+  single-pass ``sketch(A ‖ B)`` within the same bound; capacity
+  saturates at exactly K slots; weight-w rows equal w repeated unit
+  rows exactly in the total statistics (and slot-for-slot when no
+  bucket straddles a prototype); empty and single-element sketches are
+  merge identities.  Property tests run under hypothesis when
+  installed, with deterministic fallbacks.
+* **Merit-error oracle gate** — trees and forests trained with
+  ``observer_backend="sketch"`` on fixed-seed step streams must place
+  their first split within an ε-rank band of
+  ``tests/helpers.py::exact_best_split`` on the exact prefix the
+  observer saw, under BOTH the grace and eager attempt schedules, and
+  the exact merit at the sketch threshold must retain ≥ MERIT_FRAC of
+  the oracle optimum.  benchmarks/check_regression.py runs the same
+  gate over the BENCH_sketch streams.
+* **Kernel contract** — ``ops.sketch_update`` / ``ops.sketch_merge``
+  match their ref.py oracles on every backend, batch-ladder padding and
+  ``tile_r`` are bitwise no-ops, traced callers inline, and the
+  ``sketch_to_bins`` densify adapter is idempotent and merit-preserving
+  (it feeds the UNCHANGED prefix-merge VR query).
+* **Non-regression pins** — ``observer_backend="qo"`` (the default) is
+  bit-identical to a config that never mentions the knob, the observer
+  choice never reaches a kernel jit-cache key (``cache_info`` /
+  ``_cache_size`` stay unfragmented across observer and sketch_k
+  changes), freeze drops sketch state from snapshots, and the sketch
+  planes round-trip through the checkpointer and the PR-5 DP sync
+  protocol without protocol changes.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import forest as fr
+from repro.core import hoeffding as ht
+from repro.core import serve as sv
+from repro.core import sketch as sk
+from repro.core import stats
+from repro.kernels import ops, ref
+from repro.train import sharding
+from tests.helpers import exact_best_split, repeat_by_weights
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover
+    HAVE_HYPOTHESIS = False
+needs_hypothesis = pytest.mark.skipif(not HAVE_HYPOTHESIS,
+                                      reason="hypothesis not installed")
+
+BACKENDS = [
+    "interpret", "jnp",
+    pytest.param("pallas", marks=pytest.mark.skipif(
+        jax.default_backend() != "tpu",
+        reason="compiled Pallas kernels need a TPU")),
+]
+
+#: documented rank-error budget per merge level, in units of 1/K
+#: (§2.8: one compaction moves any rank by < 1 bucket width)
+RANK_SLACK = 4.0
+
+
+def _table_planes(t):
+    return np.asarray(t["y"]["n"]), np.asarray(t["y"]["mean"]), \
+        np.asarray(t["y"]["m2"]), np.asarray(t["sum_x"])
+
+
+def _assert_tables_equal(a, b, *, bitwise=True, rtol=1e-5, atol=1e-6):
+    for pa, pb in zip(_table_planes(a), _table_planes(b)):
+        if bitwise:
+            np.testing.assert_array_equal(pa, pb)
+        else:
+            np.testing.assert_allclose(pa, pb, rtol=rtol, atol=atol)
+
+
+def _rank(xs, v):
+    """Empirical CDF of sample ``xs`` at value ``v``."""
+    return float(np.mean(np.asarray(xs, np.float64) <= float(v)))
+
+
+def _merit_at(x, y, thr):
+    """Exact VR (helpers.exact_best_split's formula) at a GIVEN cut."""
+    x = np.asarray(x, np.float64)
+    y = np.asarray(y, np.float64)
+    left = x <= float(thr)
+    nl, nr = int(left.sum()), int((~left).sum())
+    if nl == 0 or nr == 0:
+        return -np.inf
+    n = len(y)
+    vl = np.var(y[left], ddof=1) if nl > 1 else 0.0
+    vr = np.var(y[~left], ddof=1) if nr > 1 else 0.0
+    return np.var(y, ddof=1) - nl / n * vl - nr / n * vr
+
+
+def _lognormal(seed, n):
+    rng = np.random.default_rng(seed)
+    x = rng.lognormal(0.0, 1.0, size=n).astype(np.float32)
+    y = (np.log(x) + 0.1 * rng.normal(size=n)).astype(np.float32)
+    return x, y
+
+
+# --------------------------------------------------------------------------
+# mergeability algebra (satellite 1)
+# --------------------------------------------------------------------------
+
+def test_empty_and_single_element():
+    e = sk.init(8)
+    assert int(sk.n_slots(e)) == 0
+    _assert_tables_equal(sk.merge(e, e), e)
+
+    s = sk.from_batch(np.float32([3.0]), np.float32([2.0]), k=8)
+    assert int(sk.n_slots(s)) == 1
+    tot = sk.total_stats(s)
+    assert float(tot["n"]) == 1.0
+    assert float(tot["mean"]) == pytest.approx(2.0)
+    # a single occupied slot offers no boundary: no valid split
+    assert not bool(sk.best_split(s).valid)
+    # empty is a (two-sided) merge identity on the total statistics
+    for m in (sk.merge(s, e), sk.merge(e, s)):
+        mt = sk.total_stats(m)
+        assert float(mt["n"]) == 1.0
+        assert float(mt["mean"]) == pytest.approx(2.0)
+
+
+def test_merge_commutative_bitwise_on_distinct_prototypes():
+    # disjoint value sets -> all prototypes distinct -> the stable sort
+    # inside compaction sees the SAME ordered centroid list either way,
+    # so the two merge orders are bitwise identical
+    xa, ya = _lognormal(11, 300)
+    xb, yb = _lognormal(12, 300)
+    xb = xb + 100.0  # disjoint support
+    a = sk.from_batch(xa, ya, k=16)
+    b = sk.from_batch(xb, yb, k=16)
+    _assert_tables_equal(sk.merge(a, b), sk.merge(b, a), bitwise=True)
+
+
+def test_merge_associative_within_rank_eps():
+    k = 32
+    parts = [_lognormal(20 + i, 400) for i in range(3)]
+    ts = [sk.from_batch(x, y, k=k) for x, y in parts]
+    left = sk.merge(sk.merge(ts[0], ts[1]), ts[2])
+    right = sk.merge(ts[0], sk.merge(ts[1], ts[2]))
+    # total statistics are exactly associative (Chan merge algebra)
+    for key in ("n", "mean", "m2"):
+        np.testing.assert_allclose(float(sk.total_stats(left)[key]),
+                                   float(sk.total_stats(right)[key]),
+                                   rtol=1e-5)
+    # quantile geometry agrees within the rank-error budget
+    xs = np.concatenate([p[0] for p in parts])
+    for q in (0.1, 0.25, 0.5, 0.75, 0.9):
+        rl = _rank(xs, sk.quantile_sk(left, q))
+        rr = _rank(xs, sk.quantile_sk(right, q))
+        assert abs(rl - rr) <= RANK_SLACK / k
+
+
+def test_merge_equals_single_pass_within_rank_eps():
+    k = 32
+    xa, ya = _lognormal(31, 600)
+    xb, yb = _lognormal(32, 600)
+    merged = sk.merge(sk.from_batch(xa, ya, k=k), sk.from_batch(xb, yb, k=k))
+    single = sk.from_batch(np.concatenate([xa, xb]),
+                           np.concatenate([ya, yb]), k=k)
+    for key in ("n", "mean", "m2"):
+        np.testing.assert_allclose(float(sk.total_stats(merged)[key]),
+                                   float(sk.total_stats(single)[key]),
+                                   rtol=1e-5)
+    xs = np.concatenate([xa, xb])
+    for q in (0.1, 0.25, 0.5, 0.75, 0.9):
+        rm = _rank(xs, sk.quantile_sk(merged, q))
+        rs = _rank(xs, sk.quantile_sk(single, q))
+        assert abs(rm - rs) <= RANK_SLACK / k
+        assert abs(rm - q) <= RANK_SLACK / k
+
+
+def test_capacity_saturation():
+    k = 16
+    x, y = _lognormal(40, 2500)  # >> k distinct values
+    t = sk.from_batch(x, y, k=k)
+    n, _, _, sum_x = _table_planes(t)
+    assert int(sk.n_slots(t)) == k          # every slot occupied...
+    assert n.shape == (k,)                  # ...and never more than k
+    np.testing.assert_allclose(float(n.sum()), 2500.0, rtol=1e-6)
+    protos = sum_x / n
+    assert np.all(np.diff(protos) > 0)      # strictly ordered centroids
+    assert protos.min() >= x.min() and protos.max() <= x.max()
+    # streaming a second slab cannot grow past capacity
+    t2 = sk.update(t, *_lognormal(41, 2500)[:2])
+    assert int(sk.n_slots(t2)) == k
+    np.testing.assert_allclose(float(sk.total_stats(t2)["n"]), 5000.0,
+                               rtol=1e-6)
+
+
+def test_weighted_equals_repeated_total_stats():
+    rng = np.random.default_rng(50)
+    x = rng.normal(size=64).astype(np.float32)
+    y = rng.normal(size=64).astype(np.float32)
+    w = rng.integers(0, 5, size=64)
+    xr, yr = repeat_by_weights(w, x, y)
+    tw = sk.from_batch(x, y, w.astype(np.float32), k=16)
+    tr = sk.from_batch(xr.astype(np.float32), yr.astype(np.float32), k=16)
+    for key in ("n", "mean", "m2"):
+        np.testing.assert_allclose(float(sk.total_stats(tw)[key]),
+                                   float(sk.total_stats(tr)[key]),
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_weighted_equals_repeated_slotwise_when_aligned():
+    # K distinct values at EQUAL weight w: every unit row of value i
+    # lands in bucket i (midpoints never straddle), so the weighted and
+    # repeated constructions agree slot-for-slot, not just in total
+    k, w = 8, 5
+    rng = np.random.default_rng(51)
+    x = np.sort(rng.normal(size=k)).astype(np.float32)
+    y = rng.normal(size=k).astype(np.float32)
+    tw = sk.from_batch(x, y, np.full(k, float(w), np.float32), k=k)
+    xr, yr = repeat_by_weights(np.full(k, w), x, y)
+    tr = sk.from_batch(xr, yr, k=k)
+    _assert_tables_equal(tw, tr, bitwise=False, rtol=1e-5, atol=1e-5)
+
+
+def test_quantile_rank_error_bound():
+    k = 32
+    x, y = _lognormal(60, 4000)
+    chunks = np.array_split(np.arange(4000), 4)
+    t = sk.init(k)
+    for c in chunks:  # one merge level per chunk: the streaming shape
+        t = sk.update(t, x[c], y[c])
+    for q in np.linspace(0.05, 0.95, 19):
+        assert abs(_rank(x, sk.quantile_sk(t, float(q))) - q) \
+            <= RANK_SLACK / k
+
+
+def _check_merge_commutative_totals(seed, na, nb):
+    rng = np.random.default_rng(seed)
+    a = sk.from_batch(rng.normal(size=na).astype(np.float32),
+                      rng.normal(size=na).astype(np.float32), k=8)
+    b = sk.from_batch(rng.normal(size=nb).astype(np.float32),
+                      rng.normal(size=nb).astype(np.float32), k=8)
+    for key in ("n", "mean", "m2"):
+        np.testing.assert_allclose(
+            float(sk.total_stats(sk.merge(a, b))[key]),
+            float(sk.total_stats(sk.merge(b, a))[key]), rtol=1e-4,
+            atol=1e-4)
+
+
+def _check_weighted_equals_repeated_totals(seed, n):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=n).astype(np.float32)
+    y = rng.normal(size=n).astype(np.float32)
+    w = rng.integers(0, 4, size=n)
+    if int(w.sum()) == 0:
+        return
+    xr, yr = repeat_by_weights(w, x, y)
+    tw = sk.from_batch(x, y, w.astype(np.float32), k=8)
+    tr = sk.from_batch(xr.astype(np.float32), yr.astype(np.float32), k=8)
+    for key in ("n", "mean", "m2"):
+        np.testing.assert_allclose(float(sk.total_stats(tw)[key]),
+                                   float(sk.total_stats(tr)[key]),
+                                   rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("seed,na,nb", [(0, 2, 2), (1, 7, 31), (2, 40, 3)])
+def test_merge_commutative_totals_fallback(seed, na, nb):
+    _check_merge_commutative_totals(seed, na, nb)
+
+
+@pytest.mark.parametrize("seed,n", [(0, 1), (1, 13), (2, 30)])
+def test_weighted_equals_repeated_totals_fallback(seed, n):
+    _check_weighted_equals_repeated_totals(seed, n)
+
+
+if HAVE_HYPOTHESIS:
+    @needs_hypothesis
+    @settings(max_examples=25, deadline=None)
+    @given(st.integers(0, 2 ** 31 - 1), st.integers(2, 40),
+           st.integers(2, 40))
+    def test_hyp_merge_commutative_totals(seed, na, nb):
+        _check_merge_commutative_totals(seed, na, nb)
+
+    @needs_hypothesis
+    @settings(max_examples=25, deadline=None)
+    @given(st.integers(0, 2 ** 31 - 1), st.integers(1, 30))
+    def test_hyp_weighted_equals_repeated_totals(seed, n):
+        _check_weighted_equals_repeated_totals(seed, n)
+
+
+# --------------------------------------------------------------------------
+# merit-error oracle gate (satellite 2)
+# --------------------------------------------------------------------------
+
+GRACE = 512
+SKETCH_K = 32
+RANK_EPS_TREE = 0.12     # 2 merge levels + boundary quantization @ K=32
+RANK_EPS_FOREST = 0.25   # + Poisson bagging jitter on the observed ranks
+MERIT_FRAC = 0.8
+
+
+def _step_stream(seed, n=1536, F=3):
+    """Step signal on feature 0, pure noise elsewhere — the split is
+    unambiguous, so the FIRST attempt fires and the observed prefix is
+    exactly the first ``GRACE`` rows (both schedules mature there)."""
+    rng = np.random.default_rng(seed)
+    X = rng.lognormal(0.0, 1.0, size=(n, F)).astype(np.float32)
+    y = (np.where(X[:, 0] > 1.0, 2.0, 0.0)
+         + 0.05 * rng.normal(size=n)).astype(np.float32)
+    return X, y
+
+
+def _sketch_cfg(schedule):
+    return ht.HTRConfig(n_features=3, max_nodes=3, n_bins=8,
+                        grace_period=GRACE, max_depth=3, r0=0.3,
+                        split_backend="jnp", attempt_schedule=schedule,
+                        observer_backend="sketch", sketch_k=SKETCH_K)
+
+
+@pytest.mark.parametrize("schedule", ["grace", "eager"])
+def test_tree_first_split_within_rank_eps_of_oracle(schedule):
+    X, y = _step_stream(70)
+    cfg = _sketch_cfg(schedule)
+    state = ht.update_stream(cfg, ht.init_state(cfg), jnp.asarray(X),
+                             jnp.asarray(y), batch_size=256)
+    assert int(state["n_nodes"]) == 3, "step signal must split the root"
+    assert int(state["feature"][0]) == 0, "champion must be the signal"
+    thr = float(state["threshold"][0])
+    # the first attempt happens after exactly GRACE rows on both
+    # schedules (grace: counter crossing; eager: maturity floor)
+    xp, yp = X[:GRACE, 0], y[:GRACE]
+    m_star, t_star = exact_best_split(xp, yp)
+    assert abs(_rank(xp, thr) - _rank(xp, t_star)) <= RANK_EPS_TREE
+    assert _merit_at(xp, yp, thr) >= MERIT_FRAC * m_star
+
+
+@pytest.mark.parametrize("schedule", ["grace", "eager"])
+def test_forest_splits_within_rank_eps_of_oracle(schedule):
+    X, y = _step_stream(71, n=2048)
+    fcfg = fr.ForestConfig(tree=_sketch_cfg(schedule), n_trees=3,
+                           subspace=0.99)
+    fstate = fr.init_forest(fcfg, jax.random.PRNGKey(0))
+    out = fr.update_stream(fcfg, fstate, jnp.asarray(X), jnp.asarray(y),
+                           batch_size=256)
+    fstate = out[0] if isinstance(out, tuple) else out
+    trees = fstate["trees"]
+    n_nodes = np.asarray(trees["n_nodes"])
+    split_members = np.nonzero(n_nodes >= 3)[0]
+    assert split_members.size >= 1, "at least one member must split"
+    # Poisson bagging reweights each member's view of the stream, so the
+    # gate compares against the full-stream oracle with a wider band
+    m_star, t_star = exact_best_split(X[:, 0], y)
+    for t in split_members:
+        assert int(trees["feature"][t, 0]) == 0
+        thr = float(trees["threshold"][t, 0])
+        assert abs(_rank(X[:, 0], thr) - _rank(X[:, 0], t_star)) \
+            <= RANK_EPS_FOREST
+        assert _merit_at(X[:, 0], y, thr) >= MERIT_FRAC * m_star
+
+
+# --------------------------------------------------------------------------
+# kernel contract: ops families vs ref oracles
+# --------------------------------------------------------------------------
+
+def _rand_state(seed, M=5, F=3, K=8, B=96):
+    rng = np.random.default_rng(seed)
+    leaf = rng.integers(0, M, size=B).astype(np.int32)
+    leaf[rng.random(B) < 0.1] = -1  # pad/unrouted rows
+    X = rng.normal(size=(B, F)).astype(np.float32)
+    y = rng.normal(size=B).astype(np.float32)
+    w = rng.integers(0, 3, size=B).astype(np.float32)
+    n, mean, m2, sum_x = sk.from_batch_planes(
+        jnp.asarray(np.maximum(leaf, 0)), jnp.asarray(X) + 10.0,
+        jnp.asarray(y), jnp.ones(B, jnp.float32), M, K)
+    ao_y = {"n": n, "mean": mean, "m2": m2}
+    return ao_y, sum_x, jnp.asarray(leaf), jnp.asarray(X), \
+        jnp.asarray(y), jnp.asarray(w)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_sketch_update_matches_ref(backend):
+    ao_y, ao_sum_x, leaf, X, y, w = _rand_state(80)
+    got_y, got_sx = ops.sketch_update(ao_y, ao_sum_x, leaf, X, y, w,
+                                      backend=backend)
+    ref_y, ref_sx = ref.sketch_update_ref(ao_y, ao_sum_x, leaf, X, y, w)
+    for key in ("n", "mean", "m2"):
+        np.testing.assert_allclose(np.asarray(got_y[key]),
+                                   np.asarray(ref_y[key]), rtol=1e-4,
+                                   atol=1e-4)
+    np.testing.assert_allclose(np.asarray(got_sx), np.asarray(ref_sx),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_sketch_merge_matches_ref(backend):
+    a_y, a_sx = _rand_state(81)[:2]
+    b_y, b_sx = _rand_state(82)[:2]
+    got_y, got_sx = ops.sketch_merge(a_y, a_sx, b_y, b_sx, backend=backend)
+    ref_y, ref_sx = ref.sketch_merge_ref(a_y, a_sx, b_y, b_sx)
+    for key in ("n", "mean", "m2"):
+        np.testing.assert_allclose(np.asarray(got_y[key]),
+                                   np.asarray(ref_y[key]), rtol=1e-4,
+                                   atol=1e-4)
+    np.testing.assert_allclose(np.asarray(got_sx), np.asarray(ref_sx),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_sketch_update_batch_pad_is_bitwise_noop():
+    ao_y, ao_sum_x, leaf, X, y, w = _rand_state(83, B=100)
+    pad = 28
+    leaf_p = jnp.concatenate([leaf, jnp.full(pad, -1, jnp.int32)])
+    X_p = jnp.concatenate([X, jnp.zeros((pad, X.shape[1]), X.dtype)])
+    y_p = jnp.concatenate([y, jnp.zeros(pad, y.dtype)])
+    w_p = jnp.concatenate([w, jnp.zeros(pad, w.dtype)])
+    a = ops.sketch_update(ao_y, ao_sum_x, leaf, X, y, w, backend="jnp")
+    b = ops.sketch_update(ao_y, ao_sum_x, leaf_p, X_p, y_p, w_p,
+                          backend="jnp")
+    for pa, pb in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(pa), np.asarray(pb))
+
+
+def test_sketch_merge_tile_r_is_bitwise_noop():
+    a_y, a_sx = _rand_state(84)[:2]
+    b_y, b_sx = _rand_state(85)[:2]
+    small = ops.sketch_merge(a_y, a_sx, b_y, b_sx, backend="interpret",
+                             tile_r=64)
+    big = ops.sketch_merge(a_y, a_sx, b_y, b_sx, backend="interpret",
+                           tile_r=256)
+    for pa, pb in zip(jax.tree.leaves(small), jax.tree.leaves(big)):
+        np.testing.assert_array_equal(np.asarray(pa), np.asarray(pb))
+
+
+def test_sketch_update_traced_caller_inlines():
+    ao_y, ao_sum_x, leaf, X, y, w = _rand_state(86)
+
+    @jax.jit
+    def run(ao_y, ao_sum_x, leaf, X, y, w):
+        return ops.sketch_update(ao_y, ao_sum_x, leaf, X, y, w,
+                                 backend="jnp")
+
+    traced = run(ao_y, ao_sum_x, leaf, X, y, w)
+    eager = ops.sketch_update(ao_y, ao_sum_x, leaf, X, y, w, backend="jnp")
+    for pa, pb in zip(jax.tree.leaves(traced), jax.tree.leaves(eager)):
+        np.testing.assert_allclose(np.asarray(pa), np.asarray(pb),
+                                   rtol=1e-6, atol=1e-6)
+
+
+def test_sketch_to_bins_idempotent_and_merit_preserving():
+    ao_y, ao_sum_x = _rand_state(87)[:2]
+    d_y, d_sx = ops.sketch_to_bins(ao_y, ao_sum_x)
+    d2_y, d2_sx = ops.sketch_to_bins(d_y, d_sx)
+    for pa, pb in zip(jax.tree.leaves((d_y, d_sx)),
+                      jax.tree.leaves((d2_y, d2_sx))):
+        np.testing.assert_array_equal(np.asarray(pa), np.asarray(pb))
+    # the adapter feeds the UNCHANGED VR query: merits must survive it
+    M, F, K = ao_y["n"].shape
+    radius = jnp.ones((M, F), jnp.float32)
+    origin = jnp.zeros((M, F), jnp.float32)
+    attempt = jnp.ones((M,), bool)
+    raw = ops.forest_best_splits(ao_y, ao_sum_x, radius, origin, attempt,
+                                 backend="jnp")
+    via = ops.forest_best_splits(d_y, d_sx, radius, origin, attempt,
+                                 backend="jnp")
+    np.testing.assert_allclose(np.asarray(raw[0]), np.asarray(via[0]),
+                               rtol=1e-5, atol=1e-6)
+
+
+# --------------------------------------------------------------------------
+# non-regression pins (satellite 3)
+# --------------------------------------------------------------------------
+
+def test_default_config_never_mentions_the_knob():
+    plain = ht.HTRConfig(n_features=3)
+    explicit = ht.HTRConfig(n_features=3, observer_backend="qo")
+    assert plain == explicit and hash(plain) == hash(explicit)
+    assert plain.observer_bins() == plain.n_bins
+    skcfg = ht.HTRConfig(n_features=3, observer_backend="sketch",
+                         sketch_k=24)
+    assert skcfg.observer_bins() == 24
+
+
+def test_config_validation():
+    with pytest.raises(ValueError):
+        ht.HTRConfig(n_features=3, observer_backend="bogus")
+    with pytest.raises(ValueError):
+        ht.HTRConfig(n_features=3, observer_backend="sketch",
+                     split_backend="oracle")
+    with pytest.raises(ValueError):
+        ht.HTRConfig(n_features=3, observer_backend="sketch", sketch_k=1)
+
+
+def test_qo_default_bitwise_vs_explicit_knob():
+    # the qo path must be bit-identical whether or not the new fields are
+    # spelled out (sketch_k differs on purpose: it must be inert under qo)
+    X, y = _step_stream(90, n=1024)
+    base = dict(n_features=3, max_nodes=15, n_bins=16, grace_period=200,
+                max_depth=4, r0=0.3, split_backend="jnp")
+    a_cfg = ht.HTRConfig(**base)
+    b_cfg = ht.HTRConfig(**base, observer_backend="qo", sketch_k=64)
+    a = ht.update_stream(a_cfg, ht.init_state(a_cfg), jnp.asarray(X),
+                         jnp.asarray(y), batch_size=256)
+    b = ht.update_stream(b_cfg, ht.init_state(b_cfg), jnp.asarray(X),
+                         jnp.asarray(y), batch_size=256)
+    for ka, kb in zip(sorted(a), sorted(b)):
+        assert ka == kb
+        for la, lb in zip(jax.tree.leaves(a[ka]), jax.tree.leaves(b[kb])):
+            np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+def test_observer_knob_never_fragments_kernel_caches():
+    ops.clear_jit_caches()
+    try:
+        X, y = _step_stream(91, n=512)
+        qo_cfg = ht.HTRConfig(n_features=3, max_nodes=7, n_bins=16,
+                              grace_period=200, max_depth=3,
+                              split_backend="jnp")
+        ht.update_stream(qo_cfg, ht.init_state(qo_cfg), jnp.asarray(X),
+                         jnp.asarray(y), batch_size=256)
+
+        for k in (16, 8):  # two sketch capacities, SAME outer cache keys
+            cfg = ht.HTRConfig(n_features=3, max_nodes=7, n_bins=16,
+                               grace_period=200, max_depth=3,
+                               split_backend="jnp",
+                               observer_backend="sketch", sketch_k=k)
+            ht.update_stream(cfg, ht.init_state(cfg), jnp.asarray(X),
+                             jnp.asarray(y), batch_size=256)
+        # inside the jitted tree step sketch_update is traced -> inlined:
+        # the factory lrus stay EMPTY (no per-config entries at all)
+        assert ops._jit_sketch_update.cache_info().currsize == 0
+        assert ops._jit_sketch_merge.cache_info().currsize == 0
+        # concrete dispatch at two capacities: the observer capacity
+        # lives in the ARRAY SHAPES, never in an lru key — both K values
+        # share ONE (backend, tile_r) factory entry per family
+        for k in (16, 8):
+            st8 = _rand_state(95, K=k)
+            ops.sketch_update(*st8, backend="jnp")
+            ops.sketch_merge(st8[0], st8[1], st8[0], st8[1], backend="jnp")
+        assert ops._jit_sketch_update.cache_info().currsize == 1
+        assert ops._jit_sketch_merge.cache_info().currsize == 1
+        assert ops._jit_sketch_update("jnp", 256) \
+            is ops._jit_sketch_update("jnp", 256)
+        n_dispatch = ops._dispatch_cached.cache_info().currsize
+
+        # a fresh qo run AFTER the sketch runs mints no new qo-family
+        # dispatch entries: the knob never reached those cache keys
+        ht.update_stream(qo_cfg, ht.init_state(qo_cfg), jnp.asarray(X),
+                         jnp.asarray(y), batch_size=256)
+        assert ops._dispatch_cached.cache_info().currsize == n_dispatch
+    finally:
+        ops.clear_jit_caches()
+
+
+def test_freeze_drops_sketch_state():
+    X, y = _step_stream(92, n=1024)
+    fcfg = fr.ForestConfig(tree=_sketch_cfg("grace"), n_trees=2,
+                           subspace=0.99)
+    out = fr.update_stream(fcfg, fr.init_forest(fcfg, jax.random.PRNGKey(1)),
+                           jnp.asarray(X), jnp.asarray(y), batch_size=256)
+    fstate = out[0] if isinstance(out, tuple) else out
+    snap = sv.freeze(fstate, version=1, step=7)
+    for field in vars(snap):
+        assert not field.startswith("ao_"), \
+            f"snapshot must not carry observer state, found {field}"
+    live = np.asarray(fr.predict(fcfg, fstate, jnp.asarray(X[:64])))
+    frozen = np.asarray(sv.predict_snapshot(snap, jnp.asarray(X[:64])))
+    np.testing.assert_allclose(frozen, live, rtol=1e-5, atol=1e-5)
+
+
+def test_checkpoint_roundtrip_preserves_sketch_planes(tmp_path):
+    from repro.checkpoint.ckpt import Checkpointer
+    cfg = _sketch_cfg("grace")
+    X, y = _step_stream(93, n=1024)
+    state = ht.update_stream(cfg, ht.init_state(cfg), jnp.asarray(X),
+                             jnp.asarray(y), batch_size=256)
+    ck = Checkpointer(str(tmp_path))
+    ck.save(1, state, blocking=True)
+    restored = ck.restore(1, state)
+    for la, lb in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+def test_dp_sync_runs_under_sketch_observer():
+    # PR-5 protocol, sketch tables: sync boundaries go through
+    # kops.sketch_merge instead of the elementwise Chan forest_merge,
+    # with NO protocol change (same delta treedef, same reduce shape)
+    X, y = _step_stream(94, n=2048)
+    fcfg = fr.ForestConfig(tree=_sketch_cfg("grace"), n_trees=2,
+                           subspace=0.99)
+    dp = sharding.build_data_parallel_reference(fcfg, n_shards=2,
+                                                sync_every=2)
+    dst = dp.init(jax.random.PRNGKey(2))
+    for i in range(8):
+        dst, _ = dp.update(dst, jnp.asarray(X[i * 256:(i + 1) * 256]),
+                           jnp.asarray(y[i * 256:(i + 1) * 256]))
+    trees = dst["forest"]["trees"]
+    n = np.asarray(trees["ao_y"]["n"])
+    assert np.isfinite(n).all() and float(n.sum()) > 0
+    # synced observer state is replicated bitwise across members' shards
+    yhat = np.asarray(fr.predict(fcfg, dst["forest"],
+                                 jnp.asarray(X[:64])))
+    assert np.isfinite(yhat).all()
